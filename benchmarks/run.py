@@ -1,0 +1,59 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV and writes benchmarks/results.csv.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweep (slow on CPU)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: truss,affected,kernels,distributed,roofline")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (affected_set, distributed_bench, kernels_bench,
+                            roofline, truss_maintenance)
+
+    selected = set((args.only or "truss,affected,kernels,distributed,roofline")
+                   .split(","))
+    rows: list = []
+    if "truss" in selected:
+        print("== truss maintenance (paper Figs. 8-10) ==")
+        truss_maintenance.main(rows, quick=not args.full)
+    if "affected" in selected:
+        print("== affected-set locality (Lemmas 6/8) ==")
+        affected_set.main(rows)
+    if "kernels" in selected:
+        print("== kernel microbenches ==")
+        kernels_bench.main(rows)
+    if "distributed" in selected:
+        print("== distributed truss collectives ==")
+        distributed_bench.main(rows, quick=not args.full)
+    if "roofline" in selected:
+        print("== roofline (from dry-run artifacts) ==")
+        roofline.main(rows)
+
+    print("\nname,us_per_call,derived")
+    lines = ["name,us_per_call,derived"]
+    for name, us, derived in rows:
+        line = f"{name},{us:.1f},{derived}"
+        print(line)
+        lines.append(line)
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results.csv")
+    with open(out, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Paper §6 experiments (Figs. 8-10): batchUpdate vs progressiveUpdate vs
+indexedUpdate across #updates and k, on CPU-scaled replicas of the paper's
+three datasets (Table 2 structure; see configs/truss_paper.py).
+
+Protocol mirrors the paper: pre-generate one update stream per dataset and
+reuse it for every approach; measure wall time of (apply updates + answer a
+k-truss query).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import truss_paper
+from repro.core import DynamicGraph, component_labels
+from repro.data.streams import OP_INSERT, make_update_stream
+from repro.data.synthetic import powerlaw_graph
+
+
+def _build(workload, seed=0):
+    edges = powerlaw_graph(workload.n_nodes, workload.m_per_node, seed=seed)
+    return edges
+
+
+def _query_progressive(g: DynamicGraph, k: int):
+    return np.asarray(component_labels(g.spec, g.state, k))
+
+
+def run_dataset(workload, n_updates_list, k, rows, seed=0):
+    edges = _build(workload, seed)
+    stream_full = make_update_stream(edges, workload.n_nodes,
+                                     max(n_updates_list), seed=seed + 1)
+
+    for n_up in n_updates_list:
+        ups = stream_full[:n_up]
+
+        # --- batchUpdate: structural apply + full re-decomposition ---------
+        g = DynamicGraph(workload.n_nodes, edges)
+        t0 = time.perf_counter()
+        g.batch_update_then_decompose([tuple(map(int, r)) for r in ups])
+        _query_progressive(g, k)
+        t_batch = time.perf_counter() - t0
+
+        # --- progressiveUpdate: Algorithms 1/2 per update -------------------
+        g = DynamicGraph(workload.n_nodes, edges)
+        # warm the jit caches outside the timed region (compile != runtime)
+        if len(ups):
+            op, a, b = map(int, ups[0])
+            (g.insert if op == OP_INSERT else g.delete)(a, b)
+            g2 = DynamicGraph(workload.n_nodes, edges)
+            g = g2
+        t0 = time.perf_counter()
+        for op, a, b in ups:
+            (g.insert if op == OP_INSERT else g.delete)(int(a), int(b))
+        _query_progressive(g, k)
+        t_prog = time.perf_counter() - t0
+
+        # --- indexedUpdate: + representative index maintenance -------------
+        g = DynamicGraph(workload.n_nodes, edges, tracked_ks=(k,))
+        g.index.query(g.state, k)  # build index
+        t0 = time.perf_counter()
+        for op, a, b in ups:
+            (g.insert if op == OP_INSERT else g.delete)(int(a), int(b))
+        g.index.query(g.state, k)  # answered from (range-invalidated) cache
+        t_idx = time.perf_counter() - t0
+
+        for name, t in (("batchUpdate", t_batch), ("progressiveUpdate", t_prog),
+                        ("indexedUpdate", t_idx)):
+            rows.append((f"truss/{workload.name}/k{k}/u{n_up}/{name}",
+                         t * 1e6 / max(n_up, 1), f"total_s={t:.3f}"))
+        print(f"  {workload.name} k={k} updates={n_up}: "
+              f"batch={t_batch:.2f}s prog={t_prog:.2f}s idx={t_idx:.2f}s")
+
+
+def main(rows: list, quick: bool = True):
+    datasets = [truss_paper.ENRON_SMALL, truss_paper.EPINIONS_SMALL,
+                truss_paper.SLASHDOT_SMALL]
+    for w in datasets:
+        ks = w.query_ks[:2] if quick else w.query_ks
+        n_updates = [10, 40, 160] if quick else [10, 40, 160, 640]
+        for k in ks:
+            run_dataset(w, n_updates, k, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    rows = []
+    main(rows, quick=True)
+    for r in rows:
+        print(",".join(map(str, r)))

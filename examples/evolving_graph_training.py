@@ -1,0 +1,76 @@
+"""End-to-end driver: GNN training on an *evolving* graph with truss-filtered
+community sampling — the paper's technique integrated as a first-class
+framework feature (DESIGN.md §4).
+
+Each round:
+  1. a chunk of edge updates arrives (insertions/deletions),
+  2. truss numbers are maintained incrementally (progressiveUpdate),
+  3. the trainer samples the maximal k-truss (cohesive community) and runs
+     GCN training steps on that subgraph only.
+
+    PYTHONPATH=src python examples/evolving_graph_training.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import DynamicGraph
+from repro.data import sampler
+from repro.data.streams import GraphUpdateStream, OP_INSERT
+from repro.data.synthetic import powerlaw_graph
+from repro.models import gnn
+from repro.training.optimizer import AdamWConfig, adamw_init, make_train_step
+
+
+def truss_subgraph_batch(g: DynamicGraph, k: int, d_feat: int, n_classes: int,
+                         pad_nodes: int, pad_edges: int, seed: int) -> dict:
+    """Batch restricted to the k-truss community (phi >= k edges)."""
+    truss_edges = g.k_truss(k)
+    if len(truss_edges) == 0:
+        truss_edges = g.edge_list()
+    return sampler.make_gnn_batch(truss_edges.astype(np.int64), g.spec.n_nodes,
+                                  d_feat, n_classes=n_classes,
+                                  pad_nodes=pad_nodes, pad_edges=pad_edges,
+                                  seed=seed)
+
+
+def main():
+    n, d_feat, k = 400, 16, 4
+    edges = powerlaw_graph(n, 5, seed=0)
+    g = DynamicGraph(n, edges, tracked_ks=(k,))
+    stream = GraphUpdateStream(g.edge_list().astype(np.int64), n, chunk=8, seed=1)
+
+    cfg = get_config("gcn-cora").smoke
+    params = gnn.init_params(cfg, jax.random.PRNGKey(0), d_feat)
+    opt_state = adamw_init(params)
+    step = jax.jit(make_train_step(lambda p, b: gnn.loss_fn(cfg, p, b),
+                                   AdamWConfig(lr=1e-2, total_steps=60,
+                                               warmup_steps=5)))
+
+    pad_edges = 4 * len(edges)
+    for rnd in range(6):
+        ups = stream.next()
+        for op, a, b in ups:
+            if op == OP_INSERT:
+                g.insert(int(a), int(b))
+            else:
+                g.delete(int(a), int(b))
+        batch = truss_subgraph_batch(g, k, d_feat, cfg.n_classes,
+                                     pad_nodes=n, pad_edges=pad_edges, seed=rnd)
+        batch = {kk: jnp.asarray(v) for kk, v in batch.items()}
+        for _ in range(5):
+            params, opt_state, stats = step(params, opt_state, batch)
+        community = len(g.k_truss(k))
+        print(f"round {rnd}: |E|={len(g.edge_list())} "
+              f"|{k}-truss|={community} loss={float(stats['loss']):.4f}")
+    print("evolving-graph training complete")
+
+
+if __name__ == "__main__":
+    main()

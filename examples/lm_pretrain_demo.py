@@ -1,0 +1,56 @@
+"""End-to-end LM training driver: trains a ~15M-param qwen3-family model for
+a few hundred steps on synthetic data with the full fault-tolerant loop
+(checkpointing, straggler monitor, resumable stream).
+
+    PYTHONPATH=src python examples/lm_pretrain_demo.py [--steps 200]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.data.synthetic import TokenStream
+from repro.models import transformer
+from repro.training.loop import LoopConfig, run
+from repro.training.optimizer import AdamWConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    # ~15M params: a scaled qwen3 (qk_norm GQA) — same family as the assigned arch
+    cfg = dataclasses.replace(get_config("qwen3-0.6b").smoke,
+                              n_layers=4, d_model=192, n_heads=6, n_kv=2,
+                              d_ff=512, head_dim=32, vocab=8192)
+    n_params = transformer.param_count(cfg)
+    print(f"model: {n_params/1e6:.1f}M params, {args.steps} steps, "
+          f"batch {args.batch} x seq {args.seq}")
+
+    out = run(
+        LoopConfig(total_steps=args.steps, ckpt_path="/tmp/repro_lm_demo/ck.npz",
+                   ckpt_every=50, log_every=20),
+        AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps),
+        lambda p, b: transformer.loss_fn(cfg, p, b, xent_chunk=64),
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)),
+        TokenStream(cfg.vocab, args.batch, args.seq, seed=0, structured=True),
+    )
+    losses = [h["loss"] for h in out["history"]]
+    k = max(2, len(losses) // 10)
+    first, last = sum(losses[:k]) / k, sum(losses[-k:]) / k
+    print(f"loss: first-{k} avg {first:.3f} -> last-{k} avg {last:.3f}")
+    assert last < first, "training must reduce loss on the structured stream"
+    print(f"stragglers flagged: {len(out['stragglers'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""DynamicGraph — host-side wrapper around the jitted truss engine.
+
+Owns capacity management (JAX arrays are fixed-shape; we re-allocate with
+doubled capacity when edge slots or per-node degree headroom run out),
+strategy selection (batchUpdate / progressiveUpdate / indexedUpdate, paper
+Table 3), and the update-range bookkeeping the index needs.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import decomposition, maintenance
+from .graph import GraphSpec, GraphState, from_edge_list, lookup_edge
+from .index import TrussIndex
+
+
+class DynamicGraph:
+    def __init__(self, n_nodes: int, edges=(), d_max: int | None = None,
+                 e_cap: int | None = None, support_method: str = "sorted",
+                 tracked_ks: tuple[int, ...] = ()):
+        edges = np.asarray(list(edges), dtype=np.int64).reshape(-1, 2)
+        deg = np.bincount(edges.reshape(-1), minlength=n_nodes) if edges.size else np.zeros(n_nodes)
+        d_max = int(d_max or max(8, int(deg.max(initial=0)) * 2))
+        e_cap = int(e_cap or max(16, len(edges) * 2))
+        self.spec = GraphSpec(n_nodes=n_nodes, d_max=d_max, e_cap=e_cap)
+        self.state = from_edge_list(self.spec, edges) if len(edges) else None
+        if self.state is None:
+            from .graph import empty_state
+            self.state = empty_state(self.spec)
+        self.support_method = support_method
+        self.state = decomposition.decompose_and_set(self.spec, self.state, support_method)
+        self.index = TrussIndex(self.spec, tracked_ks)
+
+    # -- capacity ------------------------------------------------------------
+    def _ensure_capacity(self, a: int, b: int, inserting: bool):
+        need_realloc = False
+        spec = self.spec
+        if inserting:
+            deg = np.asarray(self.state.deg)
+            n_edges = int(np.asarray(self.state.active).sum())
+            if n_edges + 1 > spec.e_cap or deg[a] + 1 > spec.d_max or deg[b] + 1 > spec.d_max:
+                need_realloc = True
+        if need_realloc:
+            self._grow(extra_edge=(a, b))
+
+    def _grow(self, extra_edge=None):
+        """Double capacities and rebuild state (host path, rare)."""
+        el = self.edge_list()
+        deg = np.bincount(np.asarray(el).reshape(-1), minlength=self.spec.n_nodes) if len(el) else np.zeros(self.spec.n_nodes)
+        if extra_edge is not None:
+            deg[extra_edge[0]] += 1
+            deg[extra_edge[1]] += 1
+        new_spec = GraphSpec(
+            n_nodes=self.spec.n_nodes,
+            d_max=max(self.spec.d_max * 2, int(deg.max(initial=0)) + 4),
+            e_cap=max(self.spec.e_cap * 2, len(el) + 16),
+        )
+        phi_old = self.phi_dict()
+        self.spec = new_spec
+        self.state = from_edge_list(new_spec, el) if len(el) else None
+        if self.state is None:
+            from .graph import empty_state
+            self.state = empty_state(new_spec)
+        # carry phi over (slot order is preserved by from_edge_list over el order)
+        phi = np.zeros(new_spec.e_cap, np.int32)
+        for i, (u, v) in enumerate(el):
+            phi[i] = phi_old[(u, v)]
+        self.state = self.state._replace(phi=jnp.asarray(phi))
+        self.index = TrussIndex(new_spec, self.index.tracked)
+        self.index.invalidate_all()
+
+    # -- updates ---------------------------------------------------------------
+    def insert(self, a: int, b: int):
+        """progressiveUpdate insertion (Algorithm 2)."""
+        self._ensure_capacity(a, b, inserting=True)
+        stats = self._range_of(a, b, inserting=True)
+        self.state = maintenance.insert_edge_maintain(self.spec, self.state, a, b)
+        self.index.invalidate(*stats)
+
+    def delete(self, a: int, b: int):
+        """progressiveUpdate deletion (Algorithm 1)."""
+        stats = self._range_of(a, b, inserting=False)
+        self.state = maintenance.delete_edge_maintain(self.spec, self.state, a, b)
+        self.index.invalidate(*stats)
+
+    def _range_of(self, a: int, b: int, inserting: bool):
+        """Theorem 1/2 affected range for index invalidation."""
+        id1, id2, valid, kmin, kmax, ns = maintenance._edge_partner_stats(
+            self.spec, self.state, jnp.int32(a), jnp.int32(b))
+        if not bool(jnp.any(valid)):
+            return (1, 0)  # empty range
+        kmin, kmax, ns = int(kmin), int(kmax), int(ns)
+        if inserting:
+            return (kmin, min(ns + 1, kmax))
+        u, v = min(a, b), max(a, b)
+        slot, found = lookup_edge(self.spec, self.state, jnp.int32(u), jnp.int32(v))
+        phi_e = int(self.state.phi[int(slot)]) if bool(found) else 0
+        return (kmin, phi_e)
+
+    def batch_update_then_decompose(self, updates):
+        """batchUpdate baseline: apply structural updates, re-decompose."""
+        el = {tuple(e) for e in self.edge_list()}
+        for op, a, b in updates:
+            key = (min(a, b), max(a, b))
+            if op == maintenance.OP_INSERT:
+                el.add(key)
+            else:
+                el.discard(key)
+        el = sorted(el)
+        deg = np.bincount(np.asarray(el).reshape(-1), minlength=self.spec.n_nodes) if el else np.zeros(self.spec.n_nodes)
+        if len(el) > self.spec.e_cap or deg.max(initial=0) > self.spec.d_max:
+            self.spec = GraphSpec(self.spec.n_nodes,
+                                  max(self.spec.d_max, int(deg.max(initial=0)) + 4),
+                                  max(self.spec.e_cap, len(el) + 16))
+        self.state = from_edge_list(self.spec, np.asarray(el).reshape(-1, 2))
+        self.state = decomposition.decompose_and_set(self.spec, self.state, self.support_method)
+        self.index = TrussIndex(self.spec, self.index.tracked)
+        self.index.invalidate_all()
+
+    # -- views -----------------------------------------------------------------
+    def edge_list(self) -> np.ndarray:
+        act = np.asarray(self.state.active)
+        return np.asarray(self.state.edges)[act]
+
+    def phi_dict(self) -> dict:
+        act = np.asarray(self.state.active)
+        edges = np.asarray(self.state.edges)[act]
+        phis = np.asarray(self.state.phi)[act]
+        return {(int(u), int(v)): int(p) for (u, v), p in zip(edges, phis)}
+
+    def k_truss(self, k: int) -> np.ndarray:
+        act = np.asarray(self.state.active) & (np.asarray(self.state.phi) >= k)
+        return np.asarray(self.state.edges)[act]
+
+    def max_truss(self) -> int:
+        phis = np.asarray(self.state.phi)[np.asarray(self.state.active)]
+        return int(phis.max(initial=0))

@@ -1,0 +1,274 @@
+"""Capacity-bounded dynamic graph state for the truss engine.
+
+JAX requires static shapes, so the evolving graph (paper §2: undirected,
+unweighted, simple) lives in fixed-capacity arrays with validity masks:
+
+* ``edges   int32[E_cap, 2]``  canonical (u < v) endpoints; sentinel ``(N, N)``
+  on inactive slots.
+* ``active  bool[E_cap]``      slot validity.
+* ``phi     int32[E_cap]``     truss numbers (paper's ``phi(e)``); 0 inactive.
+* ``nbr     int32[N, D_max]``  per-node **sorted** neighbor ids, padded with
+  the sentinel ``N`` (sorts last, keeps rows sorted).
+* ``eid     int32[N, D_max]``  edge-slot index aligned with ``nbr`` — this is
+  what turns "neighbor intersection" into "gather both partner-edge ids".
+* ``deg     int32[N]``         current degree.
+
+The sorted-row + aligned-eid layout is the TPU adaptation of the paper's
+adjacency hash-set: membership tests and partner-edge lookup become a
+vectorized binary search (``searchsorted``) instead of pointer chasing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphSpec:
+    """Static (hashable — usable as a jit static arg) graph capacities."""
+
+    n_nodes: int
+    d_max: int
+    e_cap: int
+
+    @property
+    def n_words(self) -> int:
+        """uint32 words per adjacency-bitmap row."""
+        return (self.n_nodes + 31) // 32
+
+
+class GraphState(NamedTuple):
+    edges: jax.Array   # int32[E_cap, 2]
+    active: jax.Array  # bool[E_cap]
+    phi: jax.Array     # int32[E_cap]
+    nbr: jax.Array     # int32[N, D_max]
+    eid: jax.Array     # int32[N, D_max]
+    deg: jax.Array     # int32[N]
+
+
+def empty_state(spec: GraphSpec) -> GraphState:
+    n, d, e = spec.n_nodes, spec.d_max, spec.e_cap
+    return GraphState(
+        edges=jnp.full((e, 2), n, dtype=jnp.int32),
+        active=jnp.zeros((e,), dtype=bool),
+        phi=jnp.zeros((e,), dtype=jnp.int32),
+        nbr=jnp.full((n, d), n, dtype=jnp.int32),
+        eid=jnp.full((n, d), e, dtype=jnp.int32),
+        deg=jnp.zeros((n,), dtype=jnp.int32),
+    )
+
+
+def from_edge_list(spec: GraphSpec, edge_list: np.ndarray) -> GraphState:
+    """Bulk-load (host-side, numpy) — the fast path for dataset ingestion.
+
+    ``edge_list``: int array [m, 2]; duplicates/self-loops rejected.
+    """
+    el = np.asarray(edge_list, dtype=np.int64)
+    if el.size == 0:
+        return empty_state(spec)
+    u = np.minimum(el[:, 0], el[:, 1])
+    v = np.maximum(el[:, 0], el[:, 1])
+    if (u == v).any():
+        raise ValueError("self-loops are not allowed (simple graph)")
+    keys = u * spec.n_nodes + v
+    if len(np.unique(keys)) != len(keys):
+        raise ValueError("duplicate edges are not allowed (simple graph)")
+    m = len(u)
+    if m > spec.e_cap:
+        raise ValueError(f"{m} edges exceed capacity {spec.e_cap}")
+
+    n, d = spec.n_nodes, spec.d_max
+    nbr = np.full((n, d), n, dtype=np.int32)
+    eid = np.full((n, d), spec.e_cap, dtype=np.int32)
+    deg = np.zeros((n,), dtype=np.int32)
+    # Build per-node rows (host loop; only used at ingestion time).
+    half = np.concatenate([np.stack([u, v], 1), np.stack([v, u], 1)])
+    eidx = np.concatenate([np.arange(m), np.arange(m)])
+    order = np.lexsort((half[:, 1], half[:, 0]))
+    half, eidx = half[order], eidx[order]
+    src, dst = half[:, 0], half[:, 1]
+    counts = np.bincount(src, minlength=n)
+    if counts.max(initial=0) > d:
+        raise ValueError(f"max degree {counts.max()} exceeds d_max {d}")
+    starts = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=starts[1:])
+    slot = np.arange(len(src)) - starts[src]
+    nbr[src, slot] = dst
+    eid[src, slot] = eidx
+    deg[:] = counts
+
+    edges = np.full((spec.e_cap, 2), n, dtype=np.int32)
+    edges[:m, 0] = u
+    edges[:m, 1] = v
+    active = np.zeros((spec.e_cap,), dtype=bool)
+    active[:m] = True
+    phi = np.zeros((spec.e_cap,), dtype=np.int32)
+    return GraphState(
+        edges=jnp.asarray(edges),
+        active=jnp.asarray(active),
+        phi=jnp.asarray(phi),
+        nbr=jnp.asarray(nbr),
+        eid=jnp.asarray(eid),
+        deg=jnp.asarray(deg),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Row edits (vectorized O(D_max) shift-insert / shift-delete on sorted rows).
+# ---------------------------------------------------------------------------
+
+def _row_insert(row: jax.Array, pos: jax.Array, val: jax.Array) -> jax.Array:
+    i = jnp.arange(row.shape[0])
+    shifted = row[jnp.maximum(i - 1, 0)]
+    return jnp.where(i < pos, row, jnp.where(i == pos, val, shifted))
+
+
+def _row_delete(row: jax.Array, pos: jax.Array, sentinel) -> jax.Array:
+    i = jnp.arange(row.shape[0])
+    nxt = jnp.where(i + 1 < row.shape[0], row[jnp.minimum(i + 1, row.shape[0] - 1)], sentinel)
+    return jnp.where(i < pos, row, nxt)
+
+
+def lookup_edge(spec: GraphSpec, st: GraphState, a: jax.Array, b: jax.Array):
+    """Return (slot, found) for edge (a, b) via binary search of a's row."""
+    row = st.nbr[a]
+    p = jnp.searchsorted(row, b)
+    pc = jnp.minimum(p, spec.d_max - 1)
+    found = row[pc] == b
+    slot = jnp.where(found, st.eid[a, pc], spec.e_cap)
+    return slot, found
+
+
+def insert_edge_struct(spec: GraphSpec, st: GraphState, a: jax.Array, b: jax.Array):
+    """Structural insert (no phi maintenance). Returns (state, slot).
+
+    Caller guarantees: edge absent, a != b, deg < d_max, a free slot exists.
+    """
+    u = jnp.minimum(a, b)
+    v = jnp.maximum(a, b)
+    slot = jnp.argmin(st.active).astype(jnp.int32)  # first False
+    edges = st.edges.at[slot].set(jnp.stack([u, v]).astype(jnp.int32))
+    active = st.active.at[slot].set(True)
+
+    pa = jnp.searchsorted(st.nbr[u], v)
+    nbr = st.nbr.at[u].set(_row_insert(st.nbr[u], pa, v))
+    eid = st.eid.at[u].set(_row_insert(st.eid[u], pa, slot))
+    pb = jnp.searchsorted(nbr[v], u)
+    nbr = nbr.at[v].set(_row_insert(nbr[v], pb, u))
+    eid = eid.at[v].set(_row_insert(eid[v], pb, slot))
+    deg = st.deg.at[u].add(1).at[v].add(1)
+    return st._replace(edges=edges, active=active, nbr=nbr, eid=eid, deg=deg), slot
+
+
+def delete_edge_struct(spec: GraphSpec, st: GraphState, a: jax.Array, b: jax.Array):
+    """Structural delete. Returns (state, slot_of_deleted_edge)."""
+    u = jnp.minimum(a, b)
+    v = jnp.maximum(a, b)
+    slot, _found = lookup_edge(spec, st, u, v)
+    slot_c = jnp.minimum(slot, spec.e_cap - 1)
+    edges = st.edges.at[slot_c].set(jnp.full((2,), spec.n_nodes, jnp.int32))
+    active = st.active.at[slot_c].set(False)
+    phi = st.phi.at[slot_c].set(0)
+
+    pa = jnp.searchsorted(st.nbr[u], v)
+    nbr = st.nbr.at[u].set(_row_delete(st.nbr[u], pa, spec.n_nodes))
+    eid = st.eid.at[u].set(_row_delete(st.eid[u], pa, spec.e_cap))
+    pb = jnp.searchsorted(nbr[v], u)
+    nbr = nbr.at[v].set(_row_delete(nbr[v], pb, spec.n_nodes))
+    eid = eid.at[v].set(_row_delete(eid[v], pb, spec.e_cap))
+    deg = st.deg.at[u].add(-1).at[v].add(-1)
+    return st._replace(edges=edges, active=active, phi=phi, nbr=nbr, eid=eid, deg=deg), slot
+
+
+# ---------------------------------------------------------------------------
+# Triangle partner enumeration — the shared primitive behind support,
+# localSupport (Alg. 1 step 5) and localSupport2 (Alg. 3).
+# ---------------------------------------------------------------------------
+
+def triangle_partners(spec: GraphSpec, st: GraphState, u: jax.Array, v: jax.Array):
+    """For each query edge (u[i], v[i]) enumerate common neighbors.
+
+    Returns ``(id_uw, id_vw, valid)`` of shape [B, D_max]: slot ids of the two
+    partner edges (u,w), (v,w) for every common neighbor w, and a validity
+    mask. This is the vectorized form of the paper's ``n(v1) ∩ n(v2)`` scans.
+    """
+    w = st.nbr[u]                       # [B, D]
+    id_uw = st.eid[u]                   # [B, D]
+    valid_w = w < spec.n_nodes
+    rows_v = st.nbr[v]                  # [B, D]
+    pos = jax.vmap(jnp.searchsorted)(rows_v, w)      # [B, D]
+    pos_c = jnp.minimum(pos, spec.d_max - 1)
+    found = jnp.take_along_axis(rows_v, pos_c, axis=1) == w
+    id_vw = jnp.take_along_axis(st.eid[v], pos_c, axis=1)
+    valid = valid_w & found
+    return id_uw, id_vw, valid
+
+
+def phi_of(st: GraphState, e_cap: int, ids: jax.Array) -> jax.Array:
+    """phi gather with OOB → 0 (sentinel slot e_cap means "no edge")."""
+    return jnp.where(ids < e_cap, st.phi[jnp.minimum(ids, e_cap - 1)], 0)
+
+
+def support(spec: GraphSpec, st: GraphState, u: jax.Array, v: jax.Array,
+            alive: jax.Array | None = None) -> jax.Array:
+    """Global support sup(e, G) for query edges; optionally restricted to an
+    ``alive`` mask over edge slots (used by peeling)."""
+    id1, id2, valid = triangle_partners(spec, st, u, v)
+    if alive is not None:
+        al = jnp.concatenate([alive, jnp.zeros((1,), bool)])  # slot e_cap → False
+        ok1 = al[jnp.minimum(id1, spec.e_cap)]
+        ok2 = al[jnp.minimum(id2, spec.e_cap)]
+        valid = valid & ok1 & ok2
+    return jnp.sum(valid, axis=1).astype(jnp.int32)
+
+
+def support_all(spec: GraphSpec, st: GraphState, alive: jax.Array) -> jax.Array:
+    """Support of every edge slot within the ``alive`` subgraph. [E_cap]."""
+    u = jnp.minimum(st.edges[:, 0], spec.n_nodes - 1)
+    v = jnp.minimum(st.edges[:, 1], spec.n_nodes - 1)
+    sup = support(spec, st, u, v, alive=alive)
+    return jnp.where(alive, sup, 0)
+
+
+# ---------------------------------------------------------------------------
+# Adjacency bitmaps — TPU-native intersection via AND + popcount (DESIGN §2).
+# ---------------------------------------------------------------------------
+
+def build_bitmap(spec: GraphSpec, st: GraphState, alive: jax.Array) -> jax.Array:
+    """uint32[N, W] adjacency bitmap of the alive subgraph.
+
+    Each alive edge contributes one distinct bit per direction, so scatter-add
+    equals scatter-or (simple graph ⇒ no duplicate bits).
+    """
+    u, v = st.edges[:, 0], st.edges[:, 1]
+    u = jnp.where(alive, u, spec.n_nodes)  # OOB rows are dropped
+    v = jnp.where(alive, v, spec.n_nodes)
+    bm = jnp.zeros((spec.n_nodes, spec.n_words), dtype=jnp.uint32)
+    one = jnp.uint32(1)
+
+    def scatter_dir(bm, src, dst):
+        word = (dst // 32).astype(jnp.int32)
+        bit = (dst % 32).astype(jnp.uint32)
+        val = jnp.left_shift(one, bit)
+        return bm.at[src, word].add(val, mode="drop")
+
+    bm = scatter_dir(bm, u, v)
+    bm = scatter_dir(bm, v, u)
+    return bm
+
+
+def support_all_bitmap(spec: GraphSpec, st: GraphState, alive: jax.Array,
+                       bitmap: jax.Array | None = None) -> jax.Array:
+    """Support of every edge via bitmap popcount (Pallas kernel hot loop)."""
+    from ..kernels import ops as kernel_ops  # local import: kernels never import core
+
+    if bitmap is None:
+        bitmap = build_bitmap(spec, st, alive)
+    u = jnp.minimum(st.edges[:, 0], spec.n_nodes - 1)
+    v = jnp.minimum(st.edges[:, 1], spec.n_nodes - 1)
+    sup = kernel_ops.bitmap_support(bitmap[u], bitmap[v])
+    return jnp.where(alive, sup, 0)

@@ -1,0 +1,118 @@
+"""Truss index (paper §5): representatives for k-truss components + queries.
+
+A maximal k-truss is a connected component of the subgraph induced by edges
+with phi >= k.  The paper indexes one *representative* edge per component and
+answers "all k-trusses" by traversing from representatives.
+
+TPU adaptation: BFS from a representative is replaced by **min-label
+propagation with pointer jumping** — every component is labeled simultaneously
+in O(log n) waves, and the representative of a component is its minimum edge
+slot.  Index maintenance follows the paper's locality result: an update can
+only change k-truss structure for k inside the Theorem-1/2 range, so cached
+levels outside the invalidated range stay valid.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .graph import GraphSpec, GraphState
+
+_INF = jnp.int32(2**30)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def component_labels(spec: GraphSpec, st: GraphState, k) -> jax.Array:
+    """int32[E_cap] component label per edge of the (phi >= k)-subgraph.
+
+    Labels are node ids (min node in the component); non-member edges get
+    _INF.  Connectivity here is node-sharing between edges, which coincides
+    with the paper's traversal in §5.1/§5.2.
+    """
+    sub = st.active & (st.phi >= k)
+    u = jnp.minimum(st.edges[:, 0], spec.n_nodes - 1)
+    v = jnp.minimum(st.edges[:, 1], spec.n_nodes - 1)
+    n = spec.n_nodes
+
+    labels0 = jnp.full((n,), _INF, jnp.int32)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    labels0 = labels0.at[jnp.where(sub, u, n)].min(
+        jnp.where(sub, jnp.minimum(u, v), _INF), mode="drop")
+    labels0 = labels0.at[jnp.where(sub, v, n)].min(
+        jnp.where(sub, jnp.minimum(u, v), _INF), mode="drop")
+    del ids
+
+    def cond(carry):
+        labels, changed, it = carry
+        return changed & (it < spec.n_nodes)
+
+    def body(carry):
+        labels, _, it = carry
+        lu = labels[u]
+        lv = labels[v]
+        m = jnp.minimum(lu, lv)
+        new = labels.at[jnp.where(sub, u, n)].min(jnp.where(sub, m, _INF), mode="drop")
+        new = new.at[jnp.where(sub, v, n)].min(jnp.where(sub, m, _INF), mode="drop")
+        # pointer jumping: label[v] <- label[label[v]] (labels are node ids)
+        safe = jnp.minimum(new, n - 1)
+        jumped = jnp.where(new < _INF, new[safe], new)
+        jumped = jnp.minimum(jumped, new)
+        changed = jnp.any(jumped != labels)
+        return jumped, changed, it + 1
+
+    labels, _, _ = jax.lax.while_loop(cond, body, (labels0, jnp.asarray(True), jnp.int32(0)))
+    edge_label = jnp.where(sub, jnp.minimum(labels[u], labels[v]), _INF)
+    return edge_label
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def representatives(spec: GraphSpec, st: GraphState, k):
+    """(rep_mask[E_cap], edge_label[E_cap]): one min-slot edge per component."""
+    lab = component_labels(spec, st, k)
+    member = lab < _INF
+    # min edge slot per label: scatter-min over a node-indexed table
+    slot = jnp.arange(spec.e_cap, dtype=jnp.int32)
+    per_label = jnp.full((spec.n_nodes + 1,), _INF, jnp.int32)
+    tgt = jnp.where(member, jnp.minimum(lab, spec.n_nodes), spec.n_nodes)
+    per_label = per_label.at[tgt].min(jnp.where(member, slot, _INF), mode="promise_in_bounds")
+    rep = member & (per_label[jnp.minimum(lab, spec.n_nodes)] == slot)
+    return rep, lab
+
+
+class TrussIndex:
+    """Host-side cache of per-k component labels with range invalidation.
+
+    ``progressiveUpdate`` answers queries by recomputing labels from phi each
+    time; ``indexedUpdate`` keeps this cache and only recomputes levels whose
+    range an update invalidated (paper §5.3).
+    """
+
+    def __init__(self, spec: GraphSpec, tracked_ks: tuple[int, ...]):
+        self.spec = spec
+        self.tracked = tuple(tracked_ks)
+        self._labels: dict[int, jax.Array] = {}
+        self._dirty: set[int] = set(self.tracked)
+
+    def invalidate(self, lo: int, hi: int):
+        """An update affected phi range [lo, hi] => levels k <= hi+1 with
+        k >= lo may have changed membership or connectivity."""
+        for k in self.tracked:
+            if lo <= k <= hi + 1:
+                self._dirty.add(k)
+
+    def invalidate_all(self):
+        self._dirty.update(self.tracked)
+
+    def query(self, st: GraphState, k: int) -> jax.Array:
+        """Edge component labels of the k-truss level (cached)."""
+        if k in self._dirty or k not in self._labels:
+            self._labels[k] = component_labels(self.spec, st, k)
+            self._dirty.discard(k)
+        return self._labels[k]
+
+    def query_representatives(self, st: GraphState, k: int):
+        lab = self.query(st, k)
+        rep, _ = representatives(self.spec, st, k)
+        return rep, lab

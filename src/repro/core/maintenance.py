@@ -1,0 +1,309 @@
+"""Incremental truss maintenance (paper §4) — frontier-synchronous JAX form.
+
+The paper's Algorithms 1 and 2 are queue-driven scalar loops.  On TPU we run
+the *same chaotic iteration* as batched frontier waves inside
+``lax.while_loop`` (DESIGN.md §2):
+
+* a wave compacts the frontier mask into a fixed-size index batch
+  (``jnp.nonzero(..., size=B)``), evaluates the paper's local-support
+  certificate for the whole batch with one fused gather/searchsorted pass,
+  applies the phi updates, and scatters the next frontier from the partners
+  of every edge whose state changed;
+* Theorem 1 / Theorem 2 range pruning is applied both to frontier admission
+  and to expansion — the proofs in the paper (and the completeness argument
+  in ``oracle.py``) show the affected-dependency chains stay inside the range;
+* each edge changes state at most twice (Lemma 2), so the loop terminates.
+
+Deviations from the published pseudocode (validated against the from-scratch
+oracle by property tests):
+1. localSupport2 qualification is ``phi(g) >= k+1  OR  (phi(g) == k AND g not
+   settled)`` — the published ``phi >= k AND not unchanged`` both
+   over-excludes already-qualified edges (phi > k that happen to get settled)
+   and never settles never-marked failures.
+2. The inserted edge's phi is maintained as an exact local estimate
+   (phi(e) = max{k : |{w in S : phi(aw) >= k and phi(bw) >= k}| >= k-2})
+   and the mark-and-verify pass is iterated to a joint fixpoint, because the
+   paper reads phi(e_new) during the walk but only defines it at line 19.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .graph import (GraphSpec, GraphState, delete_edge_struct,
+                    insert_edge_struct, lookup_edge, triangle_partners)
+
+_NEG = jnp.int32(-(2**30))
+_POS = jnp.int32(2**30)
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _gather_phi(phi: jax.Array, ids: jax.Array, e_cap: int) -> jax.Array:
+    return jnp.where(ids < e_cap, phi[jnp.minimum(ids, e_cap - 1)], 0)
+
+
+def _edge_partner_stats(spec: GraphSpec, st: GraphState, a, b):
+    """kmin, kmax over E_{S_ab<->{a,b}} and |S_ab| (paper Table 1).
+
+    Evaluated on the *current* structure (before delete / before insert —
+    the partner set is identical either way since (a,b) itself never appears).
+    """
+    id1, id2, valid = triangle_partners(spec, st, a[None], b[None])
+    id1, id2, valid = id1[0], id2[0], valid[0]
+    p1 = _gather_phi(st.phi, id1, spec.e_cap)
+    p2 = _gather_phi(st.phi, id2, spec.e_cap)
+    pmin = jnp.minimum(p1, p2)
+    pmax = jnp.maximum(p1, p2)
+    kmin = jnp.min(jnp.where(valid, pmin, _POS))
+    kmax = jnp.max(jnp.where(valid, pmax, _NEG))
+    n_common = jnp.sum(valid).astype(jnp.int32)
+    return id1, id2, valid, kmin, kmax, n_common
+
+
+def _scatter_or(mask: jax.Array, ids: jax.Array, cond: jax.Array) -> jax.Array:
+    """mask |= cond scattered at ids (sentinel/e_cap ids dropped)."""
+    e_cap = mask.shape[0]
+    ids = jnp.where(cond, ids, e_cap)
+    return mask.at[ids.reshape(-1)].set(True, mode="drop")
+
+
+def _phi_new_estimate(spec: GraphSpec, phi: jax.Array, id1, id2, valid) -> jax.Array:
+    """Exact local phi of the inserted edge given partner-edge phis."""
+    p1 = _gather_phi(phi, id1, spec.e_cap)
+    p2 = _gather_phi(phi, id2, spec.e_cap)
+    pmin = jnp.where(valid, jnp.minimum(p1, p2), 0)          # [D]
+    ks = jnp.arange(3, spec.d_max + 3, dtype=jnp.int32)      # [K]
+    cnt = jnp.sum(pmin[None, :] >= ks[:, None], axis=1)      # [K]
+    feasible = cnt >= (ks - 2)
+    return jnp.maximum(jnp.int32(2), jnp.max(jnp.where(feasible, ks, 2)))
+
+
+# ---------------------------------------------------------------------------
+# deletion — Algorithm 1
+# ---------------------------------------------------------------------------
+
+class _DelCarry(NamedTuple):
+    phi: jax.Array
+    frontier: jax.Array
+    marked: jax.Array
+    it: jax.Array
+
+
+@partial(jax.jit, static_argnames=("spec", "batch"))
+def delete_edge_maintain(spec: GraphSpec, st: GraphState, a, b, batch: int = 256) -> GraphState:
+    """Delete (a, b) and maintain phi for all remaining edges."""
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    slot, _ = lookup_edge(spec, st, jnp.minimum(a, b), jnp.maximum(a, b))
+    phi_e = _gather_phi(st.phi, slot, spec.e_cap)
+    id1, id2, valid, kmin, _kmax, _ns = _edge_partner_stats(spec, st, a, b)
+
+    st, _ = delete_edge_struct(spec, st, a, b)
+    lo, hi = kmin, phi_e
+
+    # Theorem 1(a): nothing to do if S empty or kmin > phi(e).
+    propagate = jnp.any(valid) & (kmin <= phi_e)
+
+    def in_range(phi, ids):
+        p = _gather_phi(phi, ids, spec.e_cap)
+        return (ids < spec.e_cap) & (p >= lo) & (p <= hi)
+
+    frontier0 = jnp.zeros((spec.e_cap,), bool)
+    seed = valid & in_range(st.phi, id1)
+    frontier0 = _scatter_or(frontier0, id1, seed & propagate)
+    seed2 = valid & in_range(st.phi, id2)
+    frontier0 = _scatter_or(frontier0, id2, seed2 & propagate)
+    frontier0 = frontier0 & st.active
+
+    def cond(c: _DelCarry):
+        return jnp.any(c.frontier) & (c.it < 4 * spec.e_cap)
+
+    def body(c: _DelCarry):
+        idx = jnp.nonzero(c.frontier, size=batch, fill_value=spec.e_cap)[0]
+        live = idx < spec.e_cap
+        idxc = jnp.minimum(idx, spec.e_cap - 1)
+        u = jnp.minimum(st.edges[idxc, 0], spec.n_nodes - 1)
+        v = jnp.minimum(st.edges[idxc, 1], spec.n_nodes - 1)
+        k = c.phi[idxc]
+
+        # localSupport(f, phi(f)) on current phi (Alg. 1 step 5)
+        p1, p2, tval = triangle_partners(spec, st, u, v)
+        q1 = _gather_phi(c.phi, p1, spec.e_cap) >= k[:, None]
+        q2 = _gather_phi(c.phi, p2, spec.e_cap) >= k[:, None]
+        # partner edges must still be alive (deleted slot has phi==0 < lo>=2? guard via active)
+        al = jnp.concatenate([st.active, jnp.zeros((1,), bool)])
+        a1 = al[jnp.minimum(p1, spec.e_cap)]
+        a2 = al[jnp.minimum(p2, spec.e_cap)]
+        ls = jnp.sum(tval & q1 & q2 & a1 & a2, axis=1).astype(jnp.int32)
+
+        dec = live & st.active[idxc] & ~c.marked[idxc] & (ls < k - 2) & (k >= lo) & (k <= hi)
+        phi = c.phi.at[jnp.where(dec, idx, spec.e_cap)].add(-1, mode="drop")
+        marked = _scatter_or(c.marked, idx, dec)
+
+        # expand: partners of every decremented edge, Theorem-1 range filter
+        exp1 = tval & dec[:, None] & in_range(phi, p1)
+        exp2 = tval & dec[:, None] & in_range(phi, p2)
+        nxt = jnp.zeros((spec.e_cap,), bool)
+        nxt = _scatter_or(nxt, p1, exp1)
+        nxt = _scatter_or(nxt, p2, exp2)
+        nxt = nxt & st.active & ~marked
+
+        processed = jnp.zeros((spec.e_cap,), bool)
+        processed = _scatter_or(processed, idx, live)
+        frontier = (c.frontier & ~processed) | nxt
+        return _DelCarry(phi, frontier, marked, c.it + 1)
+
+    init = _DelCarry(st.phi, frontier0, jnp.zeros((spec.e_cap,), bool), jnp.int32(0))
+    out = jax.lax.while_loop(cond, body, init)
+    return st._replace(phi=jnp.where(st.active, out.phi, 0))
+
+
+# ---------------------------------------------------------------------------
+# insertion — Algorithm 2 (mark-and-verify) + new-edge phi fixpoint
+# ---------------------------------------------------------------------------
+
+class _InsCarry(NamedTuple):
+    phi: jax.Array        # phi with phi[e_new] = current estimate
+    frontier: jax.Array
+    marked: jax.Array
+    settled: jax.Array    # the paper's ``unchanged`` flags
+    it: jax.Array
+
+
+@partial(jax.jit, static_argnames=("spec", "batch"))
+def insert_edge_maintain(spec: GraphSpec, st: GraphState, a, b, batch: int = 256) -> GraphState:
+    """Insert (a, b), maintain phi of existing edges, compute phi of (a, b)."""
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    id1, id2, valid, kmin, kmax, n_common = _edge_partner_stats(spec, st, a, b)
+    st, e_new = insert_edge_struct(spec, st, a, b)
+
+    bound = jnp.minimum(n_common + 1, kmax)
+    propagate = jnp.any(valid) & (kmin <= n_common + 1)
+    lo, hi = kmin, bound
+
+    def in_range(phi, ids):
+        p = _gather_phi(phi, ids, spec.e_cap)
+        return (ids < spec.e_cap) & (p >= lo) & (p <= hi) & (ids != e_new)
+
+    # Upper-bound initialization (Lemma 1 + Lemma 4): the outer fixpoint must
+    # iterate FROM ABOVE — see oracle.Oracle.insert for the soundness
+    # argument (a from-below estimate settles edges unsoundly when promotions
+    # and phi(e_new) are mutually dependent).
+    ub = jnp.where(jnp.any(valid),
+                   jnp.minimum(n_common + 2, kmax + 1),
+                   jnp.int32(2))
+    phi0 = st.phi.at[e_new].set(ub)
+
+    al = jnp.concatenate([st.active, jnp.zeros((1,), bool)])
+
+    def mark_and_verify(phi):
+        """One full mark-and-verify sweep at a fixed phi[e_new]; returns marks."""
+        frontier0 = jnp.zeros((spec.e_cap,), bool)
+        frontier0 = _scatter_or(frontier0, id1, valid & in_range(phi, id1) & propagate)
+        frontier0 = _scatter_or(frontier0, id2, valid & in_range(phi, id2) & propagate)
+        frontier0 = frontier0 & st.active
+
+        def cond(c: _InsCarry):
+            return jnp.any(c.frontier) & (c.it < 8 * spec.e_cap)
+
+        def body(c: _InsCarry):
+            idx = jnp.nonzero(c.frontier, size=batch, fill_value=spec.e_cap)[0]
+            live = idx < spec.e_cap
+            idxc = jnp.minimum(idx, spec.e_cap - 1)
+            u = jnp.minimum(st.edges[idxc, 0], spec.n_nodes - 1)
+            v = jnp.minimum(st.edges[idxc, 1], spec.n_nodes - 1)
+            k = c.phi[idxc]
+
+            p1, p2, tval = triangle_partners(spec, st, u, v)
+
+            def qualifies(ids):
+                p = _gather_phi(c.phi, ids, spec.e_cap)
+                alive = al[jnp.minimum(ids, spec.e_cap)]
+                settled = jnp.concatenate([c.settled, jnp.zeros((1,), bool)])[
+                    jnp.minimum(ids, spec.e_cap)]
+                is_new = ids == e_new
+                firm = p >= (k[:, None] + 1)                       # already in the (k+1)-truss
+                maybe = (p == k[:, None]) & ~settled & ~is_new     # optimistically promotable
+                return alive & (firm | maybe)
+
+            ls2 = jnp.sum(tval & qualifies(p1) & qualifies(p2), axis=1).astype(jnp.int32)
+            ok = live & st.active[idxc] & (k >= lo) & (k <= hi) & ~c.settled[idxc]
+            passes = ok & (ls2 >= k - 1)
+            fails = ok & (ls2 < k - 1)
+
+            newly_marked = passes & ~c.marked[idxc]
+            marked = (_scatter_or(c.marked, idx, newly_marked)
+                      & ~_scatter_or(jnp.zeros((spec.e_cap,), bool), idx, fails))
+            settled = _scatter_or(c.settled, idx, fails)
+
+            changed = newly_marked | fails
+            sl = jnp.concatenate([settled, jnp.zeros((1,), bool)])
+            exp1 = tval & changed[:, None] & in_range(c.phi, p1) & ~sl[jnp.minimum(p1, spec.e_cap)]
+            exp2 = tval & changed[:, None] & in_range(c.phi, p2) & ~sl[jnp.minimum(p2, spec.e_cap)]
+            nxt = jnp.zeros((spec.e_cap,), bool)
+            nxt = _scatter_or(nxt, p1, exp1)
+            nxt = _scatter_or(nxt, p2, exp2)
+            nxt = nxt & st.active & ~settled
+
+            processed = _scatter_or(jnp.zeros((spec.e_cap,), bool), idx, live)
+            frontier = (c.frontier & ~processed) | nxt
+            return _InsCarry(c.phi, frontier, marked, settled, c.it + 1)
+
+        z = jnp.zeros((spec.e_cap,), bool)
+        out = jax.lax.while_loop(cond, body, _InsCarry(phi, frontier0, z, z, jnp.int32(0)))
+        return out.marked
+
+    # outer fixpoint on phi[e_new]
+    def outer_cond(carry):
+        _phi, _marked, done, it = carry
+        return (~done) & (it < spec.d_max + 2)
+
+    def outer_body(carry):
+        phi, _m, _done, it = carry
+        marked = mark_and_verify(phi)
+        trial = phi + marked.astype(jnp.int32)
+        est = _phi_new_estimate(spec, trial, id1, id2, valid)
+        done = est == phi[e_new]
+        phi_next = jnp.where(done, phi, phi.at[e_new].set(est))
+        return phi_next, marked, done, it + 1
+
+    z = jnp.zeros((spec.e_cap,), bool)
+    phi_fix, marked, _done, _it = jax.lax.while_loop(
+        outer_cond, outer_body, (phi0, z, jnp.asarray(False), jnp.int32(0)))
+    phi_final = phi_fix + marked.astype(jnp.int32)
+    return st._replace(phi=jnp.where(st.active, phi_final, 0))
+
+
+# ---------------------------------------------------------------------------
+# batched update streams (progressiveUpdate driver)
+# ---------------------------------------------------------------------------
+
+OP_INSERT = 1
+OP_DELETE = 0
+
+
+@partial(jax.jit, static_argnames=("spec", "batch"))
+def apply_updates(spec: GraphSpec, st: GraphState, ops, aa, bb, batch: int = 256) -> GraphState:
+    """Apply a stream of single-edge updates with incremental maintenance.
+
+    ops/aa/bb: int32[U]. This is the paper's ``progressiveUpdate``: each
+    update runs Algorithm 1 or 2; cost scales with the affected set, not |E|.
+    """
+    def step(st, upd):
+        op, a, b = upd
+        st = jax.lax.cond(
+            op == OP_INSERT,
+            lambda s: insert_edge_maintain(spec, s, a, b, batch=batch),
+            lambda s: delete_edge_maintain(spec, s, a, b, batch=batch),
+            st)
+        return st, ()
+
+    st, _ = jax.lax.scan(step, st, (ops, aa, bb))
+    return st

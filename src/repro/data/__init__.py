@@ -1,0 +1,3 @@
+from . import synthetic, sampler, streams
+
+__all__ = ["synthetic", "sampler", "streams"]

@@ -1,0 +1,70 @@
+"""Update-stream generation (paper §6.1): random insert/delete mixes over a
+base graph, stored for reuse so every approach sees the identical stream."""
+from __future__ import annotations
+
+import numpy as np
+
+OP_DELETE = 0
+OP_INSERT = 1
+
+
+def make_update_stream(edges: np.ndarray, n_nodes: int, n_updates: int,
+                       insert_frac: float = 0.5, seed: int = 0) -> np.ndarray:
+    """[U, 3] rows (op, a, b).  Deletions pick existing edges; insertions pick
+    absent pairs; the evolving edge set is tracked so the stream is valid
+    when applied in order (mirrors the paper's experimental protocol)."""
+    rng = np.random.default_rng(seed)
+    present = {(int(u), int(v)) for u, v in edges}
+    out = []
+    for _ in range(n_updates):
+        do_insert = rng.random() < insert_frac or not present
+        if do_insert:
+            while True:
+                a, b = rng.integers(0, n_nodes, size=2)
+                a, b = int(min(a, b)), int(max(a, b))
+                if a != b and (a, b) not in present:
+                    break
+            present.add((a, b))
+            out.append((OP_INSERT, a, b))
+        else:
+            idx = rng.integers(len(present))
+            e = list(present)[idx]
+            present.discard(e)
+            out.append((OP_DELETE, e[0], e[1]))
+    return np.asarray(out, np.int64)
+
+
+class GraphUpdateStream:
+    """Resumable wrapper used by the evolving-graph training example."""
+
+    def __init__(self, edges: np.ndarray, n_nodes: int, chunk: int = 16,
+                 insert_frac: float = 0.5, seed: int = 0, step: int = 0):
+        self.edges = edges
+        self.n = n_nodes
+        self.chunk = chunk
+        self.insert_frac = insert_frac
+        self.seed = seed
+        self.step = step
+        self._present = {(int(u), int(v)) for u, v in edges}
+
+    def next(self) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, self.step))
+        self.step += 1
+        out = []
+        for _ in range(self.chunk):
+            if rng.random() < self.insert_frac or not self._present:
+                while True:
+                    a, b = rng.integers(0, self.n, size=2)
+                    a, b = int(min(a, b)), int(max(a, b))
+                    if a != b and (a, b) not in self._present:
+                        break
+                self._present.add((a, b))
+                out.append((OP_INSERT, a, b))
+            else:
+                e = sorted(self._present)[rng.integers(len(self._present))]
+                self._present.discard(e)
+                out.append((OP_DELETE, e[0], e[1]))
+        return np.asarray(out, np.int64)
+
+    def state_dict(self):
+        return {"seed": self.seed, "step": self.step}

@@ -1,0 +1,144 @@
+"""Synthetic data generation: graphs (power-law / ER), LM token streams,
+recsys click batches.  Everything is seeded + resumable (fault tolerance:
+a restored step counter reproduces the exact batch sequence).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# graphs
+# ---------------------------------------------------------------------------
+
+def er_graph(n: int, avg_deg: float, seed: int = 0) -> np.ndarray:
+    """Erdos-Renyi edge list [m, 2] (u < v)."""
+    rng = np.random.default_rng(seed)
+    p = min(1.0, avg_deg / max(n - 1, 1))
+    m_target = int(n * avg_deg / 2)
+    # sample with replacement then dedupe (fast for sparse)
+    u = rng.integers(0, n, size=m_target * 2)
+    v = rng.integers(0, n, size=m_target * 2)
+    keep = u != v
+    u, v = np.minimum(u[keep], v[keep]), np.maximum(u[keep], v[keep])
+    keys = np.unique(u.astype(np.int64) * n + v)
+    del p
+    out = np.stack([keys // n, keys % n], 1)
+    return out[:m_target]
+
+
+def powerlaw_graph(n: int, m_per_node: int = 4, seed: int = 0,
+                   max_degree: int | None = None) -> np.ndarray:
+    """Barabasi-Albert-style preferential attachment (triangle-rich variant:
+    each new node also closes one triangle among its targets), producing the
+    clustered power-law structure of the paper's social-network datasets."""
+    rng = np.random.default_rng(seed)
+    edges: set[tuple[int, int]] = set()
+    targets = list(range(min(m_per_node + 1, n)))
+    for i in range(len(targets)):
+        for j in range(i + 1, len(targets)):
+            edges.add((targets[i], targets[j]))
+    repeated = [t for e in edges for t in e]
+    deg = np.zeros(n, np.int64)
+    for e in edges:
+        deg[e[0]] += 1
+        deg[e[1]] += 1
+    for v in range(len(targets), n):
+        chosen: set[int] = set()
+        while len(chosen) < min(m_per_node, v):
+            t = int(repeated[rng.integers(len(repeated))]) if repeated else int(rng.integers(v))
+            if t != v and (max_degree is None or deg[t] < max_degree):
+                chosen.add(t)
+            elif max_degree is not None:
+                t = int(rng.integers(v))
+                if t != v and deg[t] < max_degree:
+                    chosen.add(t)
+        ch = list(chosen)
+        # close one triangle: connect two of the chosen targets
+        if len(ch) >= 2 and rng.random() < 0.7:
+            a, b = ch[0], ch[1]
+            e = (min(a, b), max(a, b))
+            if e not in edges and (max_degree is None or (deg[a] < max_degree and deg[b] < max_degree)):
+                edges.add(e)
+                deg[a] += 1
+                deg[b] += 1
+                repeated += [a, b]
+        for t in ch:
+            e = (min(v, t), max(v, t))
+            if e not in edges:
+                edges.add(e)
+                deg[v] += 1
+                deg[t] += 1
+                repeated += [v, t]
+    return np.asarray(sorted(edges), dtype=np.int64).reshape(-1, 2)
+
+
+def random_positions(n: int, seed: int = 0) -> np.ndarray:
+    return np.random.default_rng(seed).normal(size=(n, 3)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# resumable token / click streams
+# ---------------------------------------------------------------------------
+
+class TokenStream:
+    """Deterministic synthetic LM batches; state = (seed, step).
+
+    ``structured=True`` emits noisy arithmetic progressions (mod vocab) —
+    a learnable next-token signal for convergence demos; the default uniform
+    stream sits at the log(vocab) entropy floor by construction."""
+
+    def __init__(self, vocab: int, batch: int, seq: int, seed: int = 0,
+                 step: int = 0, structured: bool = False):
+        self.vocab, self.batch, self.seq = vocab, batch, seq
+        self.seed, self.step = seed, step
+        self.structured = structured
+
+    def next(self) -> dict:
+        rng = np.random.default_rng((self.seed, self.step))
+        if self.structured:
+            phase = rng.integers(0, self.vocab, size=(self.batch, 1))
+            stride = rng.integers(1, 17, size=(self.batch, 1))
+            idx = np.arange(self.seq + 1)[None, :]
+            toks = (phase + stride * idx) % self.vocab
+            noise = rng.random(size=toks.shape) < 0.05
+            toks = np.where(noise, rng.integers(0, self.vocab, size=toks.shape), toks)
+            toks = toks.astype(np.int32)
+        else:
+            toks = rng.integers(0, self.vocab, size=(self.batch, self.seq + 1),
+                                dtype=np.int32)
+        self.step += 1
+        return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+    def state_dict(self) -> dict:
+        return {"seed": self.seed, "step": self.step}
+
+    @classmethod
+    def from_state(cls, vocab, batch, seq, state):
+        return cls(vocab, batch, seq, seed=state["seed"], step=state["step"])
+
+
+class ClickStream:
+    """Synthetic CTR batches for xDeepFM."""
+
+    def __init__(self, cfg, batch: int, seed: int = 0, step: int = 0):
+        self.cfg, self.batch = cfg, batch
+        self.seed, self.step = seed, step
+
+    def next(self) -> dict:
+        c = self.cfg
+        rng = np.random.default_rng((self.seed, self.step))
+        self.step += 1
+        n_single = c.n_sparse - c.n_multihot
+        return {
+            "sparse_ids": rng.integers(0, c.vocab_per_field,
+                                       size=(self.batch, c.n_sparse), dtype=np.int32),
+            "multihot_ids": rng.integers(0, c.vocab_per_field,
+                                         size=(self.batch, c.n_multihot, c.bag_size),
+                                         dtype=np.int32),
+            "dense": rng.normal(size=(self.batch, c.n_dense)).astype(np.float32),
+            "labels": rng.integers(0, 2, size=(self.batch,)).astype(np.int32),
+        }
+
+    def state_dict(self):
+        return {"seed": self.seed, "step": self.step}

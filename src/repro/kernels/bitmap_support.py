@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: edge support via adjacency-bitmap AND + popcount.
+
+The paper's hash-set intersection ``|n(a) ∩ n(b)|`` becomes, per edge, a
+bitwise AND of two uint32 bitmap rows followed by a popcount-reduce — pure
+VPU work with perfectly coalesced VMEM reads (DESIGN.md §2).
+
+Inputs are the *pre-gathered* rows (``rows_a = bitmap[u]``, ``rows_b =
+bitmap[v]``): the gather stays in XLA where it can fuse with the producing
+scatter, and the kernel owns the hot elementwise-reduce loop.
+
+Tiling: grid = (E/EB, W/WB); the output block for edge-tile i is revisited
+across the W dimension (sequential minor grid axis on TPU), accumulating
+partial popcount sums in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EDGE_BLOCK = 512
+WORD_BLOCK = 256
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    inter = jax.lax.population_count(a_ref[...] & b_ref[...])
+    o_ref[...] += jnp.sum(inter.astype(jnp.int32), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "edge_block", "word_block"))
+def bitmap_support_kernel(rows_a: jax.Array, rows_b: jax.Array, *,
+                          interpret: bool = False,
+                          edge_block: int = EDGE_BLOCK,
+                          word_block: int = WORD_BLOCK) -> jax.Array:
+    """sup[i] = popcount(rows_a[i] & rows_b[i]).sum() for uint32 rows [E, W]."""
+    e, w = rows_a.shape
+    eb = min(edge_block, max(8, e))
+    wb = min(word_block, max(1, w))
+    e_pad = -e % eb
+    w_pad = -w % wb
+    a = jnp.pad(rows_a, ((0, e_pad), (0, w_pad)))
+    b = jnp.pad(rows_b, ((0, e_pad), (0, w_pad)))
+    ep, wp = a.shape
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(ep // eb, wp // wb),
+        in_specs=[
+            pl.BlockSpec((eb, wb), lambda i, j: (i, j)),
+            pl.BlockSpec((eb, wb), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((eb,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((ep,), jnp.int32),
+        interpret=interpret,
+    )(a, b)
+    return out[:e]

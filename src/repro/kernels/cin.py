@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: fused xDeepFM CIN layer.
+
+One CIN step is z = relu(einsum('bhd,bmd,ohm->bod', x_k, x_0, W)) — an outer
+product over the field dims followed by a 1x1 "compression".  Materializing
+the [B, H, M, D] outer product is the naive path; the fused kernel contracts
+per (batch-tile, d-column-tile) entirely in VMEM:
+
+    for each b-tile, d-tile:   s[o, b, d] = sum_{h,m} W[o,h,m] · xk[b,h,d] · x0[b,m,d]
+    reshaped as a dense dot:   P[b, d, h·m] = xk ⊗ x0  (tile-local),
+                               out[b, o, d] = P · W_flatᵀ  (MXU)
+
+so the outer product never leaves VMEM (the TPU analogue of the fused
+gather-GEMM-scatter pattern; DESIGN.md hardware notes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+B_BLOCK = 128
+D_BLOCK = 16
+
+
+def _kernel(xk_ref, x0_ref, w_ref, o_ref):
+    # xk: [BB, H, DB]  x0: [BB, M, DB]  w: [O, H, M]  o: [BB, O, DB]
+    xk = xk_ref[...].astype(jnp.float32)
+    x0 = x0_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    bb, h, db = xk.shape
+    m = x0.shape[1]
+    o = w.shape[0]
+    # tile-local outer product [BB, DB, H*M] — lives only in VMEM
+    prod = (xk[:, :, None, :] * x0[:, None, :, :])            # [BB, H, M, DB]
+    prod = prod.transpose(0, 3, 1, 2).reshape(bb * db, h * m)
+    out = jax.lax.dot_general(prod, w.reshape(o, h * m),
+                              (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # [BB*DB, O]
+    out = out.reshape(bb, db, o).transpose(0, 2, 1)
+    o_ref[...] = jnp.maximum(out, 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "b_block", "d_block"))
+def cin_layer_kernel(xk: jax.Array, x0: jax.Array, w: jax.Array, *,
+                     interpret: bool = False, b_block: int = B_BLOCK,
+                     d_block: int = D_BLOCK) -> jax.Array:
+    """xk: [B, H, D], x0: [B, M, D], w: [O, H, M] -> relu(CIN) [B, O, D]."""
+    b, h, d = xk.shape
+    m = x0.shape[1]
+    o = w.shape[0]
+    bb = min(b_block, b)
+    db = min(d_block, d)
+    b_pad = -b % bb
+    d_pad = -d % db
+    xkp = jnp.pad(xk, ((0, b_pad), (0, 0), (0, d_pad)))
+    x0p = jnp.pad(x0, ((0, b_pad), (0, 0), (0, d_pad)))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=((b + b_pad) // bb, (d + d_pad) // db),
+        in_specs=[
+            pl.BlockSpec((bb, h, db), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((bb, m, db), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((o, h, m), lambda i, j: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, o, db), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b + b_pad, o, d + d_pad), xk.dtype),
+        interpret=interpret,
+    )(xkp, x0p, w)
+    return out[:b, :, :d]

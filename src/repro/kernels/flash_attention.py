@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: blocked online-softmax attention (FlashAttention-style).
+
+Serves the LM family's train/prefill hot spot.  Grid = (batch·heads, Q-tiles,
+KV-tiles) with the KV axis innermost (sequential); running max / normalizer /
+accumulator live in VMEM scratch and the output tile is written once, at the
+last KV step.  Causal and sliding-window (Mixtral SWA) masks are applied from
+program ids, and fully-masked KV tiles are skipped without touching the MXU.
+
+Decode (q_len = 1) is intentionally *not* served by this kernel — it is
+HBM-bandwidth-bound gather work with no flash restructuring to exploit; the
+serving engine uses a fused jnp path for it (see DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Q_BLOCK = 256
+KV_BLOCK = 256
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int | None,
+            q_block: int, kv_block: int, kv_tiles: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = qi * q_block + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 0)
+    k_pos = kj * kv_block + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 1)
+
+    # tile-level skip: is any (q, k) pair in this tile unmasked?
+    live = True
+    if causal:
+        live = (kj * kv_block) <= (qi * q_block + q_block - 1)
+    if window is not None:
+        live = live & ((kj + 1) * kv_block - 1 > qi * q_block - window)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        mask = jnp.ones_like(s, dtype=bool)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]                       # [QB, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * alpha
+                        + jax.lax.dot_general(p, v_ref[0].astype(jnp.float32),
+                                              (((1,), (0,)), ((), ())),
+                                              preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(kj == kv_tiles - 1)
+    def _flush():
+        l = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret",
+                                             "q_block", "kv_block"))
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int | None = None,
+                           interpret: bool = False,
+                           q_block: int = Q_BLOCK,
+                           kv_block: int = KV_BLOCK) -> jax.Array:
+    """q: [BH, Sq, Dh], k/v: [BH, Skv, Dh] -> [BH, Sq, Dh].
+
+    Assumes Sq == Skv alignment for the causal offset (prefill/train shapes).
+    """
+    bh, sq, dh = q.shape
+    _, skv, _ = k.shape
+    qb = min(q_block, sq)
+    kb = min(kv_block, skv)
+    q_pad = -sq % qb
+    kv_pad = -skv % kb
+    qp = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, kv_pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, kv_pad), (0, 0)))
+    nq = (sq + q_pad) // qb
+    nk = (skv + kv_pad) // kb
+    scale = dh ** -0.5
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          q_block=qb, kv_block=kb, kv_tiles=nk),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, qb, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kb, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kb, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq + q_pad, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb, dh), jnp.float32),   # acc
+            pltpu.VMEM((qb, 1), jnp.float32),    # running max
+            pltpu.VMEM((qb, 1), jnp.float32),    # running normalizer
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :sq, :]

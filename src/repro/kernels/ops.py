@@ -1,0 +1,53 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On a TPU backend the real kernels run; everywhere else (this CPU container,
+unit tests) they execute in ``interpret=True`` mode so the *same kernel body*
+is validated numerically.  ``use_kernels(False)`` drops to the pure-jnp
+references entirely (useful for A/B benchmarking and as an escape hatch).
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .bitmap_support import bitmap_support_kernel
+from .cin import cin_layer_kernel
+from .segment_matmul import segment_matmul_kernel
+from .flash_attention import flash_attention_kernel
+
+_USE_KERNELS = True
+
+
+def use_kernels(flag: bool) -> None:
+    global _USE_KERNELS
+    _USE_KERNELS = flag
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def bitmap_support(rows_a, rows_b):
+    if not _USE_KERNELS:
+        return ref.bitmap_support_ref(rows_a, rows_b)
+    return bitmap_support_kernel(rows_a, rows_b, interpret=_interpret())
+
+
+def segment_matmul(messages, seg_ids, num_segments: int):
+    if not _USE_KERNELS:
+        return ref.segment_matmul_ref(messages, seg_ids, num_segments)
+    return segment_matmul_kernel(messages, seg_ids, num_segments,
+                                 interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None):
+    if not _USE_KERNELS:
+        return ref.attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention_kernel(q, k, v, causal=causal, window=window,
+                                  interpret=_interpret())
+
+
+def cin_layer(xk, x0, w):
+    if not _USE_KERNELS:
+        return ref.cin_layer_ref(xk, x0, w)
+    return cin_layer_kernel(xk, x0, w, interpret=_interpret())

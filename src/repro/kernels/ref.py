@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bitmap_support_ref(rows_a: jax.Array, rows_b: jax.Array) -> jax.Array:
+    inter = jax.lax.population_count(rows_a & rows_b)
+    return jnp.sum(inter.astype(jnp.int32), axis=1)
+
+
+def segment_matmul_ref(messages: jax.Array, seg_ids: jax.Array,
+                       num_segments: int) -> jax.Array:
+    return jax.ops.segment_sum(messages, seg_ids, num_segments=num_segments)
+
+
+def cin_layer_ref(xk: jax.Array, x0: jax.Array, w: jax.Array) -> jax.Array:
+    z = jnp.einsum("bhd,bmd,ohm->bod", xk.astype(jnp.float32),
+                   x0.astype(jnp.float32), w.astype(jnp.float32))
+    return jnp.maximum(z, 0.0).astype(xk.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None) -> jax.Array:
+    """[BH, Sq, Dh] x [BH, Skv, Dh] -> [BH, Sq, Dh], fp32 softmax."""
+    bh, sq, dh = q.shape
+    skv = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * dh ** -0.5
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

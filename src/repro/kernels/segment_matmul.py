@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: segment-sum as a one-hot matmul on the MXU.
+
+GNN message aggregation / embedding-bag reduction is a scatter-add
+(``jax.ops.segment_sum``) — a serialization hazard on most hardware.  The
+TPU-native adaptation turns each (node-tile × edge-tile) step into a dense
+``onehot(seg)ᵀ @ messages`` contraction that runs on the systolic array:
+
+    out[n0:n0+NB, :] += (seg[e0:e0+EB] == n0..n0+NB)ᵀ · msg[e0:e0+EB, :]
+
+No atomics, no sorting requirement on ``seg``, deterministic accumulation
+order.  Cost is (N/NB)·E·NB MACs — profitable when E·D is large relative to N
+(message passing, embedding bags), which is exactly the assigned regime.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SEG_BLOCK = 256     # node-tile (output rows)
+EDGE_BLOCK = 512    # edge-tile (contraction dim)
+
+
+def _kernel(seg_ref, m_ref, o_ref, *, seg_block: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    n0 = i * seg_block
+    seg = seg_ref[...]                                   # [EB]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (seg_block, seg.shape[0]), 0) + n0
+    onehot = (rows == seg[None, :]).astype(m_ref.dtype)  # [NB, EB]
+    o_ref[...] += jnp.dot(onehot, m_ref[...],
+                          preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "interpret",
+                                             "seg_block", "edge_block"))
+def segment_matmul_kernel(messages: jax.Array, seg_ids: jax.Array,
+                          num_segments: int, *, interpret: bool = False,
+                          seg_block: int = SEG_BLOCK,
+                          edge_block: int = EDGE_BLOCK) -> jax.Array:
+    """out[s] = sum of messages[i] where seg_ids[i] == s.  [N_seg, D].
+
+    Out-of-range seg ids (e.g. padding = num_segments) are dropped naturally:
+    their one-hot row never matches.
+    """
+    e, d = messages.shape
+    nb = min(seg_block, max(8, num_segments))
+    eb = min(edge_block, max(8, e))
+    e_pad = -e % eb
+    n_pad = -num_segments % nb
+    m = jnp.pad(messages, ((0, e_pad), (0, 0)))
+    seg = jnp.pad(seg_ids.astype(jnp.int32), (0, e_pad),
+                  constant_values=num_segments + n_pad)  # padding never matches
+    np_ = num_segments + n_pad
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, seg_block=nb),
+        grid=(np_ // nb, (e + e_pad) // eb),
+        in_specs=[
+            pl.BlockSpec((eb,), lambda i, j: (j,)),
+            pl.BlockSpec((eb, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((nb, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, d), messages.dtype),
+        interpret=interpret,
+    )(seg, m)
+    return out[:num_segments]

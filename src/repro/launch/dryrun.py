@@ -1,0 +1,246 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and record memory / cost / collective artifacts.
+
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--cell C]
+        [--mesh single|multi|both] [--out dryrun_artifacts]
+
+Success criterion (deliverable e): .lower().compile() succeeds for the
+16x16 ("data","model") mesh AND the 2x16x16 ("pod","data","model") mesh for
+every cell; artifacts feed EXPERIMENTS.md §Dry-run and §Roofline.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# The two lines above MUST run before any jax import (device count locks on
+# first backend init) and must not leak into tests/benches (those see 1 CPU).
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from ..configs import REGISTRY
+from .mesh import make_production_mesh
+from .specs import build_cell
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of an HLO shape string, incl. tuple shapes."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective op over the optimized HLO.
+
+    Result bytes are the per-device receive volume (all-gather: full gathered
+    shape; all-reduce: reduced shape; reduce-scatter: scattered shard) — a
+    consistent per-device wire proxy for the roofline's collective term.
+    """
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.lstrip()
+        m = re.match(r"(?:ROOT\s+)?[%\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", s)
+        if not m:
+            continue
+        op = m.group(2)
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):
+                if op.endswith(("-start", "-done")) and not op.endswith("-start"):
+                    continue  # count -start only, skip -done double count
+                stats[c]["count"] += 1
+                stats[c]["bytes"] += shape_bytes(m.group(1))
+                break
+    return stats
+
+
+import contextlib
+import dataclasses
+
+
+@contextlib.contextmanager
+def _unrolled(attn_chunk: int | None):
+    """Cost-exact tracing mode: fully unroll scans, 2x2 attention tiles."""
+    from ..models import layers as L
+    old_u, old_a = L.SCAN_UNROLL, L.ATTN_CHUNK_OVERRIDE
+    L.SCAN_UNROLL, L.ATTN_CHUNK_OVERRIDE = True, attn_chunk
+    try:
+        yield
+    finally:
+        L.SCAN_UNROLL, L.ATTN_CHUNK_OVERRIDE = old_u, old_a
+
+
+def _cost_fields(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    out = {"flops": float(ca.get("flops", 0.0)),
+           "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+           "transcendentals": float(ca.get("transcendentals", 0.0))}
+    st = collective_stats(compiled.as_text())
+    for c, v in st.items():
+        out[f"coll_{c}_bytes"] = float(v["bytes"])
+        out[f"coll_{c}_count"] = float(v["count"])
+    return out
+
+
+def _measure_variant(arch, cell, mesh, n_layers: int, xent_chunk: int | None):
+    from .specs import build_cell as _bc
+    cfg2 = dataclasses.replace(arch.model, n_layers=n_layers)
+    arch2 = dataclasses.replace(arch, model=cfg2)
+    kw = {"xent_chunk": xent_chunk, "fsdp": False} if cell.kind == "train" else {}
+    plan = _bc(arch2, cell, mesh, **kw)
+    jitted = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                     out_shardings=plan.out_shardings,
+                     donate_argnums=plan.donate_argnums)
+    s = cell.params["seq"]
+    attn_chunk = max(s // 2, 16) if cell.kind in ("train", "prefill") else None
+    with mesh, _unrolled(attn_chunk):
+        lowered = jitted.lower(*plan.args)
+    return _cost_fields(lowered.compile())
+
+
+def lm_cost_exact(arch, cell, mesh) -> dict:
+    """XLA cost analysis counts each scan body once; lower tiny fully-unrolled
+    variants and extrapolate exactly (uniform layers/chunks => every cost
+    field is affine in the trip counts):
+        F(L, X) = V1 + (L-1)(V2 - V1) + (X-1)(V3 - V1)
+    with V1=(1 layer, 1 xent chunk), V2=(2 layers), V3=(2 xent chunks).
+    """
+    s = cell.params["seq"]
+    l_true = arch.model.n_layers
+    v1 = _measure_variant(arch, cell, mesh, 1, s)
+    v2 = _measure_variant(arch, cell, mesh, 2, s)
+    out = {}
+    if cell.kind == "train":
+        x_true = max(s // 512, 1)
+        v3 = _measure_variant(arch, cell, mesh, 1, s // 2)
+        for k in v1:
+            out[k] = v1[k] + (l_true - 1) * (v2[k] - v1[k]) + (x_true - 1) * (v3[k] - v1[k])
+        # variants run without FSDP (layer-dim divisibility); add the FSDP
+        # schedule's wire bytes analytically: fwd + bwd param all-gathers and
+        # the grad reduce-scatter ~= 3 x fp32 params / model-axis shards.
+        from ..models.transformer import param_count
+        out["coll_all-gather_bytes"] = (out.get("coll_all-gather_bytes", 0.0)
+                                        + 3.0 * 4.0 * param_count(arch.model)
+                                        / mesh.shape["model"])
+    else:
+        for k in v1:
+            out[k] = v1[k] + (l_true - 1) * (v2[k] - v1[k])
+    return {f"{k}_exact": max(v, 0.0) for k, v in out.items()}
+
+
+def run_cell(arch_id: str, cell_name: str, mesh, mesh_name: str,
+             cost_exact: bool = True) -> dict:
+    arch = REGISTRY[arch_id]
+    cell = next(c for c in arch.cells() if c.name == cell_name)
+    rec = {"arch": arch_id, "cell": cell_name, "mesh": mesh_name, "ok": False}
+    try:
+        plan = build_cell(arch, cell, mesh)
+        jitted = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                         out_shardings=plan.out_shardings,
+                         donate_argnums=plan.donate_argnums)
+        t0 = time.time()
+        with mesh:
+            lowered = jitted.lower(*plan.args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 2)
+
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                v = getattr(ma, k, None)
+                if v is not None:
+                    rec[k] = int(v)
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        if ca:
+            rec["flops"] = float(ca.get("flops", 0.0))
+            rec["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+            rec["transcendentals"] = float(ca.get("transcendentals", 0.0))
+        txt = compiled.as_text()
+        rec["collectives"] = collective_stats(txt)
+        rec["hlo_bytes"] = len(txt)
+        if cost_exact and arch.family == "lm":
+            t0 = time.time()
+            rec.update(lm_cost_exact(arch, cell, mesh))
+            rec["cost_exact_s"] = round(time.time() - t0, 2)
+        rec["ok"] = True
+        print(f"[OK]   {arch_id:26s} {cell_name:15s} {mesh_name:6s} "
+              f"lower={rec['lower_s']}s compile={rec['compile_s']}s "
+              f"flops={rec.get('flops', 0):.3e}")
+    except Exception as e:  # noqa: BLE001 — recorded, run continues
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {arch_id:26s} {cell_name:15s} {mesh_name:6s} {rec['error']}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="dryrun_artifacts")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+
+    os.makedirs(args.out, exist_ok=True)
+    results, n_fail = [], 0
+    for arch_id, arch in sorted(REGISTRY.items()):
+        if args.arch and arch_id != args.arch:
+            continue
+        for cell in arch.cells():
+            if args.cell and cell.name != args.cell:
+                continue
+            for mesh_name, mesh in meshes:
+                rec = run_cell(arch_id, cell.name, mesh, mesh_name)
+                results.append(rec)
+                n_fail += 0 if rec["ok"] else 1
+                path = os.path.join(
+                    args.out, f"{arch_id}__{cell.name}__{mesh_name}.json")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+        for cell in arch.skipped_cells():
+            print(f"[SKIP] {arch_id:26s} {cell.name:15s} "
+                  "(full-attention arch; long-context rule, DESIGN.md §5)")
+
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"\n{len(results) - n_fail}/{len(results)} cells compiled")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

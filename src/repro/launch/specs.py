@@ -1,0 +1,355 @@
+"""Per-(architecture x shape-cell) lowering plans: the function to compile,
+ShapeDtypeStruct inputs (never allocated), and in/out shardings.
+
+This is the single source of truth shared by the dry-run, the roofline
+reader, and the real train/serve drivers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, GNNConfig, LMConfig, RecsysConfig, ShapeCell
+from ..models import gnn, recsys, transformer
+from ..models.layers import COMPUTE_DTYPE
+from ..training import optimizer as opt_lib
+from .mesh import dp_axes
+
+S = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch_id: str
+    cell: str
+    fn: Callable                # jittable
+    args: tuple                 # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+    static_notes: str = ""
+
+
+def _shard_tree(tree, spec_fn, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec_fn(jax.tree_util.keystr(path), leaf)),
+        tree)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def _with_fsdp(spec: P, shape, fsdp_axes, dsize: int) -> P:
+    """Add FSDP sharding on the first free dim divisible by the DP size
+    (prefers the stacked-layer dim; falls back to d_model etc.)."""
+    if not fsdp_axes:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for dim in range(len(shape)):
+        if parts[dim] is None and shape[dim] % dsize == 0 and shape[dim] >= dsize:
+            parts[dim] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+            break
+    return P(*parts)
+
+
+def lm_param_spec(cfg: LMConfig, model_axis_size: int, data_axes=None):
+    """TP rules on the "model" axis + FSDP sharding over the data axes
+    (train cells only) — without it, params + Adam states replicate across
+    data and the MoE archs exceed 16 GB/chip (measured 32.6 / 71.1 GB per
+    device; EXPERIMENTS §Dry-run).  The scan body all-gathers one layer
+    slice at a time (standard FSDP schedule)."""
+    ep = cfg.moe_experts > 0 and cfg.moe_experts % model_axis_size == 0
+    fsdp_axes = tuple(a[0] for a in (data_axes or ()))
+    dsize = 1
+    for a in (data_axes or ()):
+        dsize *= a[1]
+
+    def base(path: str, nd: int) -> P:
+        if "embed" in path and "unembed" not in path:
+            return P("model", None)
+        if "unembed" in path:
+            return P(None, "model")
+        if any(k in path for k in ("wq", "wk", "wv")):
+            return P(None, None, "model")
+        if "wo" in path:
+            return P(None, "model", None)
+        if "router" in path:
+            return P(None, None, None)
+        if "moe" in path and nd == 4:  # [L, E, din, dout]
+            if ep:
+                return P(None, "model", None, None)
+            if "w_down" in path:
+                return P(None, None, "model", None)
+            return P(None, None, None, "model")
+        if nd == 3 and ("w_gate" in path or "w_up" in path):
+            return P(None, None, "model")
+        if nd == 3 and "w_down" in path:
+            return P(None, "model", None)
+        return P(*([None] * nd))
+
+    def rule(path: str, leaf) -> P:
+        spec = base(path, len(leaf.shape))
+        return _with_fsdp(spec, leaf.shape, fsdp_axes, dsize)
+
+    return rule
+
+
+def _lm_param_structs(cfg: LMConfig):
+    return jax.eval_shape(lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def _opt_structs(param_structs):
+    return {"mu": jax.tree.map(lambda s: S(s.shape, jnp.float32), param_structs),
+            "nu": jax.tree.map(lambda s: S(s.shape, jnp.float32), param_structs),
+            "step": S((), jnp.int32)}
+
+
+def _opt_shardings(param_shardings, mesh):
+    return {"mu": param_shardings, "nu": param_shardings,
+            "step": NamedSharding(mesh, P())}
+
+
+def build_lm_cell(arch: ArchConfig, cell: ShapeCell, mesh,
+                  opt_cfg: opt_lib.AdamWConfig | None = None,
+                  xent_chunk: int | None = None, fsdp: bool = True) -> CellPlan:
+    cfg: LMConfig = arch.model
+    dp = dp_axes(mesh)
+    p_structs = _lm_param_structs(cfg)
+    # FSDP over the data axes only where optimizer states exist (training);
+    # serving keeps params replicated across data for latency.  The dry-run's
+    # cost-exact variants pass fsdp=False (1-2 layer stand-ins can't satisfy
+    # the layer-dim divisibility and would silently fall back to
+    # contraction-dim sharding) and add the gather bytes analytically.
+    data_axes = ([(a, mesh.shape[a]) for a in ("pod", "data") if a in mesh.axis_names]
+                 if (cell.kind == "train" and fsdp) else None)
+    rule = lm_param_spec(cfg, mesh.shape["model"], data_axes=data_axes)
+    p_shard = _shard_tree(p_structs, rule, mesh)
+    repl = NamedSharding(mesh, P())
+
+    if cell.kind == "train":
+        b, s = cell.params["batch"], cell.params["seq"]
+        xc = xent_chunk or min(512, s)
+        opt_cfg = opt_cfg or opt_lib.AdamWConfig()
+        step_fn = opt_lib.make_train_step(
+            lambda p, batch: transformer.loss_fn(cfg, p, batch, xent_chunk=xc),
+            opt_cfg)
+        o_structs = _opt_structs(p_structs)
+        batch_structs = {"tokens": S((b, s), jnp.int32), "targets": S((b, s), jnp.int32)}
+        batch_shard = {"tokens": NamedSharding(mesh, P(dp, None)),
+                       "targets": NamedSharding(mesh, P(dp, None))}
+        return CellPlan(
+            arch.arch_id, cell.name, step_fn,
+            (p_structs, o_structs, batch_structs),
+            (p_shard, _opt_shardings(p_shard, mesh), batch_shard),
+            (p_shard, _opt_shardings(p_shard, mesh),
+             {"grad_norm": repl, "lr": repl, "loss": repl}),
+            donate_argnums=(0, 1))
+
+    if cell.kind == "prefill":
+        b, s = cell.params["batch"], cell.params["seq"]
+        fn = partial(transformer.prefill, cfg)
+        toks = S((b, s), jnp.int32)
+        return CellPlan(
+            arch.arch_id, cell.name, fn, (p_structs, toks),
+            (p_shard, NamedSharding(mesh, P(dp, None))),
+            NamedSharding(mesh, P(dp, "model")))
+
+    if cell.kind in ("decode", "long_decode"):
+        b, s = cell.params["batch"], cell.params["seq"]
+        c = transformer.cache_len(cfg, s)
+        bdp = dp if cell.kind == "decode" else None  # batch=1: unshardable
+        cache_structs = {
+            "k": S((cfg.n_layers, b, c, cfg.n_kv, cfg.head_dim), COMPUTE_DTYPE),
+            "v": S((cfg.n_layers, b, c, cfg.n_kv, cfg.head_dim), COMPUTE_DTYPE)}
+        cache_spec = P(None, bdp, "model", None, None)
+        cache_shard = {"k": NamedSharding(mesh, cache_spec),
+                       "v": NamedSharding(mesh, cache_spec)}
+        fn = partial(transformer.decode_step, cfg)
+        args = (p_structs, cache_structs, S((b,), jnp.int32), S((), jnp.int32))
+        return CellPlan(
+            arch.arch_id, cell.name, fn, args,
+            (p_shard, cache_shard, NamedSharding(mesh, P(bdp)), repl),
+            (NamedSharding(mesh, P(bdp, "model")), cache_shard),
+            donate_argnums=(1,))
+
+    raise ValueError(cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+def _round_up(x: int, q: int = 512) -> int:
+    """Pad quantum: edge/triplet arrays shard over up to 32 DP ways."""
+    return -(-x // q) * q
+
+
+def _gnn_batch_structs(arch: ArchConfig, cell: ShapeCell):
+    """Static padded shapes per cell (node-replicated, edge-sharded layout)."""
+    m: GNNConfig = arch.model
+    p = cell.params
+    need_pos = m.model in ("meshgraphnet", "dimenet")
+    need_trip = m.model == "dimenet"
+    if cell.kind == "full_graph":
+        n, e2, f = p["n_nodes"], _round_up(2 * p["n_edges"]), p["d_feat"]
+        n_graphs = 0
+    elif cell.kind == "minibatch":
+        bn = p["batch_nodes"]
+        f1, f2 = p["fanout"]
+        n = bn * (1 + f1 + f1 * f2)
+        e2 = _round_up(bn * f1 + bn * f1 * f2)
+        f = p["d_feat"]
+        n_graphs = 0
+    else:  # batched_graphs
+        b = p["batch"]
+        n, e2, f = b * p["n_nodes"], _round_up(2 * b * p["n_edges"]), p["d_feat"]
+        n_graphs = b
+    batch = {
+        "node_feat": S((n, f), jnp.float32),
+        "edge_src": S((e2,), jnp.int32),
+        "edge_dst": S((e2,), jnp.int32),
+        "edge_mask": S((e2,), jnp.bool_),
+        "node_mask": S((n,), jnp.bool_),
+        "labels": S((n,), jnp.int32),
+        "graph_id": S((n,), jnp.int32),
+    }
+    if m.model == "meshgraphnet":
+        batch["targets"] = S((n, 3), jnp.float32)
+    if need_pos:
+        batch["pos"] = S((n, 3), jnp.float32)
+    if need_trip:
+        t = 8 * e2  # capped triplets (sampler cap = 8/edge)
+        batch["triplet_kj"] = S((t,), jnp.int32)
+        batch["triplet_ji"] = S((t,), jnp.int32)
+        batch["triplet_mask"] = S((t,), jnp.bool_)
+        if n_graphs:
+            batch["graph_targets"] = S((n_graphs,), jnp.float32)
+        else:
+            batch["energy_target"] = S((), jnp.float32)
+    if n_graphs and m.model == "gin":
+        batch["graph_labels"] = S((n_graphs,), jnp.int32)
+    return batch, n_graphs, f
+
+
+def _gnn_batch_shardings(batch_structs, mesh):
+    dp = dp_axes(mesh)
+
+    def spec(name: str, leaf) -> P:
+        if name.startswith(("edge_", "triplet_")):
+            return P(dp, *([None] * (len(leaf.shape) - 1)))
+        return P(*([None] * len(leaf.shape)))
+
+    return {k: NamedSharding(mesh, spec(k, v)) for k, v in batch_structs.items()}
+
+
+def build_gnn_cell(arch: ArchConfig, cell: ShapeCell, mesh,
+                   opt_cfg: opt_lib.AdamWConfig | None = None) -> CellPlan:
+    m: GNNConfig = arch.model
+    batch_structs, n_graphs, d_in = _gnn_batch_structs(arch, cell)
+    p_structs = jax.eval_shape(
+        lambda: gnn.init_params(m, jax.random.PRNGKey(0), d_in))
+    repl_tree = jax.tree.map(lambda _: NamedSharding(mesh, P()), p_structs)
+    repl = NamedSharding(mesh, P())
+    opt_cfg = opt_cfg or opt_lib.AdamWConfig()
+    step_fn = opt_lib.make_train_step(
+        lambda p, b: gnn.loss_fn(m, p, b, n_graphs=n_graphs), opt_cfg)
+    o_structs = _opt_structs(p_structs)
+    o_shard = _opt_shardings(repl_tree, mesh)
+    b_shard = _gnn_batch_shardings(batch_structs, mesh)
+    return CellPlan(
+        arch.arch_id, cell.name, step_fn,
+        (p_structs, o_structs, batch_structs),
+        (repl_tree, o_shard, b_shard),
+        (repl_tree, o_shard, {"grad_norm": repl, "lr": repl, "loss": repl}),
+        donate_argnums=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# recsys family
+# ---------------------------------------------------------------------------
+
+def recsys_param_spec(path: str, leaf) -> P:
+    if "table" in path:
+        return P("model", None)
+    if "linear_w" in path:
+        return P("model")
+    return P(*([None] * len(leaf.shape)))
+
+
+def build_recsys_cell(arch: ArchConfig, cell: ShapeCell, mesh,
+                      opt_cfg: opt_lib.AdamWConfig | None = None) -> CellPlan:
+    cfg: RecsysConfig = arch.model
+    dp = dp_axes(mesh)
+    p_structs = jax.eval_shape(lambda: recsys.init_params(cfg, jax.random.PRNGKey(0)))
+    p_shard = _shard_tree(p_structs, recsys_param_spec, mesh)
+    repl = NamedSharding(mesh, P())
+
+    def batch_structs(b):
+        return {
+            "sparse_ids": S((b, cfg.n_sparse), jnp.int32),
+            "multihot_ids": S((b, cfg.n_multihot, cfg.bag_size), jnp.int32),
+            "dense": S((b, cfg.n_dense), jnp.float32),
+            "labels": S((b,), jnp.int32),
+        }
+
+    def batch_shardings(b):
+        return {k: NamedSharding(mesh, P(dp, *([None] * (len(v.shape) - 1))))
+                for k, v in batch_structs(b).items()}
+
+    if cell.kind == "train_batch":
+        b = cell.params["batch"]
+        opt_cfg = opt_cfg or opt_lib.AdamWConfig()
+        step_fn = opt_lib.make_train_step(
+            lambda p, bt: recsys.loss_fn(cfg, p, bt), opt_cfg)
+        o_structs = _opt_structs(p_structs)
+        o_shard = _opt_shardings(p_shard, mesh)
+        return CellPlan(
+            arch.arch_id, cell.name, step_fn,
+            (p_structs, o_structs, batch_structs(b)),
+            (p_shard, o_shard, batch_shardings(b)),
+            (p_shard, o_shard, {"grad_norm": repl, "lr": repl, "loss": repl}),
+            donate_argnums=(0, 1))
+
+    if cell.kind == "serve":
+        b = cell.params["batch"]
+        fn = partial(recsys.serve, cfg)
+        return CellPlan(
+            arch.arch_id, cell.name, fn,
+            (p_structs, batch_structs(b)),
+            (p_shard, batch_shardings(b)),
+            NamedSharding(mesh, P(dp)))
+
+    if cell.kind == "retrieval":
+        b = cell.params["batch"]
+        nc = cell.params["n_candidates"]
+        bs = batch_structs(b)
+        bs["candidate_ids"] = S((nc,), jnp.int32)
+        bshard = {k: NamedSharding(mesh, P(*([None] * len(v.shape))))
+                  for k, v in bs.items()}
+        bshard["candidate_ids"] = NamedSharding(mesh, P(dp))
+        fn = partial(recsys.retrieval_score, cfg)
+        return CellPlan(
+            arch.arch_id, cell.name, fn, (p_structs, bs),
+            (p_shard, bshard), repl)
+
+    raise ValueError(cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: ArchConfig, cell: ShapeCell, mesh, **kw) -> CellPlan:
+    if arch.family == "lm":
+        return build_lm_cell(arch, cell, mesh, **kw)
+    if arch.family == "gnn":
+        return build_gnn_cell(arch, cell, mesh, **kw)
+    if arch.family == "recsys":
+        return build_recsys_cell(arch, cell, mesh, **kw)
+    raise ValueError(arch.family)

@@ -1,0 +1,3 @@
+from . import layers, transformer, gnn, recsys
+
+__all__ = ["layers", "transformer", "gnn", "recsys"]

@@ -1,0 +1,202 @@
+"""LM family: decoder-only transformer covering all five assigned archs
+(dense GQA, qk-norm, MQA/GeGLU, SWA, and MoE variants) with train, prefill
+and ring-buffer decode paths.
+
+Layers are stacked and driven by ``lax.scan`` with activation rematerialization
+(dot-saveable policy) so the HLO stays compact at 32–48 layers and the
+dry-run compiles quickly; cross-entropy is computed in sequence chunks so the
+[B, S, V] logits tensor is never materialized at vocab 200k+ (MaxText-style).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LMConfig
+from . import layers
+from .layers import COMPUTE_DTYPE
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(cfg: LMConfig, key) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "attn_norm": layers.norm_init(cfg.d_model, cfg.norm),
+        "attn": layers.attention_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                      cfg.head_dim, cfg.qk_norm),
+        "mlp_norm": layers.norm_init(cfg.d_model, cfg.norm),
+    }
+    if cfg.moe_experts:
+        p["moe"] = layers.moe_init(k2, cfg.d_model, cfg.d_ff, cfg.moe_experts, cfg.mlp)
+    else:
+        p["mlp"] = layers.mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.mlp)
+    return p
+
+
+def init_params(cfg: LMConfig, key) -> dict:
+    ke, kl, ko = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(cfg, k))(layer_keys)
+    p = {
+        "embed": layers.embed_init(ke, cfg.vocab, cfg.d_model),
+        "layers": stacked,
+        "final_norm": layers.norm_init(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = layers.dense_init(ko, cfg.d_model, cfg.vocab,
+                                         scale=1.0 / math.sqrt(cfg.d_model))
+    return p
+
+
+def param_count(cfg: LMConfig) -> int:
+    attn = cfg.d_model * cfg.head_dim * (cfg.n_heads * 2 + cfg.n_kv * 2)
+    if cfg.moe_experts:
+        n_mat = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+        ffn = cfg.moe_experts * n_mat * cfg.d_model * cfg.d_ff + cfg.d_model * cfg.moe_experts
+    else:
+        n_mat = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+        ffn = n_mat * cfg.d_model * cfg.d_ff
+    per_layer = attn + ffn + 2 * cfg.d_model
+    emb = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    return cfg.n_layers * per_layer + emb
+
+
+def active_param_count(cfg: LMConfig) -> int:
+    """Active params per token (MoE: only top-k experts count)."""
+    if not cfg.moe_experts:
+        return param_count(cfg)
+    attn = cfg.d_model * cfg.head_dim * (cfg.n_heads * 2 + cfg.n_kv * 2)
+    n_mat = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+    ffn = cfg.moe_top_k * n_mat * cfg.d_model * cfg.d_ff + cfg.d_model * cfg.moe_experts
+    per_layer = attn + ffn + 2 * cfg.d_model
+    emb = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    return cfg.n_layers * per_layer + emb
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(cfg: LMConfig, lp: dict, x: jax.Array, positions: jax.Array):
+    h, _ = layers.attention_apply(
+        lp["attn"], layers.norm_apply(lp["attn_norm"], x, cfg.norm), positions,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+        causal=True, window=cfg.window, qk_norm=cfg.qk_norm,
+        rope_theta=cfg.rope_theta)
+    x = x + h
+    z = layers.norm_apply(lp["mlp_norm"], x, cfg.norm)
+    if cfg.moe_experts:
+        m, aux = layers.moe_apply(lp["moe"], z, n_experts=cfg.moe_experts,
+                                  top_k=cfg.moe_top_k, kind=cfg.mlp,
+                                  capacity_factor=cfg.moe_capacity)
+    else:
+        m, aux = layers.mlp_apply(lp["mlp"], z, cfg.mlp), jnp.float32(0)
+    return x + m, aux
+
+
+def backbone(cfg: LMConfig, params: dict, tokens: jax.Array) -> tuple:
+    """tokens [B, S] -> (hidden [B, S, D] bf16, aux_loss)."""
+    b, s = tokens.shape
+    x = params["embed"].astype(COMPUTE_DTYPE)[tokens] * math.sqrt(cfg.d_model)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    layer = partial(_layer_fwd, cfg)
+    layer = jax.checkpoint(layer,
+                           policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    def scan_body(x, lp):
+        x, aux = layer(lp, x, positions)
+        return x, aux
+
+    x, auxs = jax.lax.scan(scan_body, x, params["layers"],
+                           unroll=layers.SCAN_UNROLL)
+    x = layers.norm_apply(params["final_norm"], x, cfg.norm)
+    return x, jnp.sum(auxs)
+
+
+def _unembed(cfg: LMConfig, params: dict):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return w.astype(COMPUTE_DTYPE)
+
+
+def loss_fn(cfg: LMConfig, params: dict, batch: dict, *,
+            xent_chunk: int = 512) -> jax.Array:
+    """Causal LM loss; logits computed per sequence-chunk (never [B,S,V])."""
+    tokens, targets = batch["tokens"], batch["targets"]
+    hidden, aux = backbone(cfg, params, tokens)
+    w = _unembed(cfg, params)
+    b, s, d = hidden.shape
+    c = min(xent_chunk, s)
+    n_chunks = s // c
+
+    def chunk_loss(_, i):
+        h = jax.lax.dynamic_slice_in_dim(hidden, i * c, c, axis=1)
+        t = jax.lax.dynamic_slice_in_dim(targets, i * c, c, axis=1)
+        logits = (h @ w).astype(jnp.float32)                     # [B, c, V]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return (), jnp.sum(lse - gold)
+
+    chunk_loss = jax.checkpoint(chunk_loss, prevent_cse=False)
+    _, losses = jax.lax.scan(chunk_loss, (), jnp.arange(n_chunks),
+                             unroll=layers.SCAN_UNROLL)
+    nll = jnp.sum(losses) / (b * s)
+    return nll + 0.01 * aux
+
+
+def prefill(cfg: LMConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    """Prefill forward returning last-position logits [B, V]."""
+    hidden, _ = backbone(cfg, params, tokens)
+    return (hidden[:, -1] @ _unembed(cfg, params)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step): one token against a KV cache
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg: LMConfig, seq: int) -> int:
+    return min(seq, cfg.window) if cfg.window else seq
+
+
+def init_cache(cfg: LMConfig, batch: int, seq: int, dtype=COMPUTE_DTYPE) -> dict:
+    c = cache_len(cfg, seq)
+    shape = (cfg.n_layers, batch, c, cfg.n_kv, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(cfg: LMConfig, params: dict, cache: dict, token: jax.Array,
+                pos: jax.Array) -> tuple[jax.Array, dict]:
+    """token [B] int32, pos scalar int32 -> (logits [B, V], cache)."""
+    b = token.shape[0]
+    x = params["embed"].astype(COMPUTE_DTYPE)[token][:, None, :] * math.sqrt(cfg.d_model)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    def scan_body(x, inputs):
+        lp, kc, vc = inputs
+        h, new_cache = layers.attention_apply(
+            lp["attn"], layers.norm_apply(lp["attn_norm"], x, cfg.norm), positions,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+            causal=True, window=cfg.window, qk_norm=cfg.qk_norm,
+            rope_theta=cfg.rope_theta, cache=(kc, vc), cache_pos=pos)
+        x = x + h
+        z = layers.norm_apply(lp["mlp_norm"], x, cfg.norm)
+        if cfg.moe_experts:
+            m, _ = layers.moe_apply(lp["moe"], z, n_experts=cfg.moe_experts,
+                                    top_k=cfg.moe_top_k, kind=cfg.mlp,
+                                    capacity_factor=cfg.moe_capacity)
+        else:
+            m = layers.mlp_apply(lp["mlp"], z, cfg.mlp)
+        return x + m, new_cache
+
+    x, (k_new, v_new) = jax.lax.scan(scan_body, x,
+                                     (params["layers"], cache["k"], cache["v"]),
+                                     unroll=layers.SCAN_UNROLL)
+    x = layers.norm_apply(params["final_norm"], x, cfg.norm)
+    logits = (x[:, 0] @ _unembed(cfg, params)).astype(jnp.float32)
+    return logits, {"k": k_new, "v": v_new}

@@ -1,0 +1,99 @@
+"""Batched decode serving engine for the LM family.
+
+Production shape: continuous batching over B slots with a ring-buffer KV
+cache (SWA archs carry only `window` positions), greedy/temperature sampling,
+and per-slot completion tracking.  The decode step is the same jitted
+``transformer.decode_step`` the dry-run lowers, so the serving path and the
+compiled artifact are one and the same.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import LMConfig
+from ..models import transformer
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 16
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class DecodeEngine:
+    def __init__(self, cfg: LMConfig, params, batch_slots: int, max_seq: int,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.b = batch_slots
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.cache = transformer.init_cache(cfg, batch_slots, max_seq)
+        self.slots: list[Request | None] = [None] * batch_slots
+        self.pos = 0
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._key = jax.random.PRNGKey(seed)
+        self._step = jax.jit(partial(transformer.decode_step, cfg),
+                             donate_argnums=(1,))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _fill_slots(self):
+        for i in range(self.b):
+            if self.slots[i] is None and self.queue:
+                self.slots[i] = self.queue.pop(0)
+
+    def _next_token_host(self, i: int) -> int:
+        """Token each slot feeds next (prompt first, then its own samples)."""
+        r = self.slots[i]
+        if r is None:
+            return 0
+        consumed = self.pos
+        if consumed < len(r.prompt):
+            return r.prompt[consumed]
+        return r.out[-1] if r.out else r.prompt[-1]
+
+    def step(self) -> int:
+        """One synchronous decode wave across all slots; returns #active."""
+        self._fill_slots()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active or self.pos >= self.max_seq:
+            return 0
+        tokens = jnp.asarray([self._next_token_host(i) for i in range(self.b)],
+                             jnp.int32)
+        logits, self.cache = self._step(self.params, self.cache, tokens,
+                                        jnp.int32(self.pos))
+        if self.temperature > 0:
+            self._key, sub = jax.random.split(self._key)
+            next_tok = jax.random.categorical(sub, logits / self.temperature, axis=-1)
+        else:
+            next_tok = jnp.argmax(logits, axis=-1)
+        next_tok = np.asarray(next_tok)
+        self.pos += 1
+        for i in active:
+            r = self.slots[i]
+            if self.pos <= len(r.prompt):
+                continue  # still prefilling this slot's prompt
+            r.out.append(int(next_tok[i]))
+            if len(r.out) >= r.max_new:
+                r.done = True
+                self.finished.append(r)
+                self.slots[i] = None
+        return len(active)
+
+    def run(self, max_waves: int = 10_000):
+        while (any(self.slots) or self.queue) and max_waves > 0:
+            if self.step() == 0:
+                break
+            max_waves -= 1
+        return self.finished

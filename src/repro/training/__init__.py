@@ -1,0 +1,3 @@
+from . import optimizer, checkpoint, compression, loop
+
+__all__ = ["optimizer", "checkpoint", "compression", "loop"]

@@ -1,0 +1,169 @@
+"""Checkpointing: mesh-agnostic save/restore + async writer + preemption hook.
+
+Arrays are saved *unsharded* (np.savez of fully-replicated host copies) with
+the pytree structure encoded in flattened key paths, so a checkpoint written
+under one mesh restores under any other (elastic re-scaling: restore then
+re-shard with jax.device_put against the new sharding tree).  An atomic
+rename makes partially-written checkpoints invisible; the async writer snaps
+host copies synchronously (cheap) and writes in a background thread.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import signal
+import tempfile
+import threading
+
+import jax
+import numpy as np
+
+
+def _encode_array(a: np.ndarray) -> tuple[str, np.ndarray]:
+    """numpy can't serialize ml_dtypes (bfloat16 etc.) through savez — store
+    the raw bits as uint16/uint8 with a dtype tag in the key."""
+    if a.dtype.name == "bfloat16":
+        return "::bf16", a.view(np.uint16)
+    if a.dtype.name in ("float8_e4m3fn", "float8_e5m2"):
+        return f"::{a.dtype.name}", a.view(np.uint8)
+    return "", a
+
+
+_TAG_TO_DTYPE = {"bf16": "bfloat16", "float8_e4m3fn": "float8_e4m3fn",
+                 "float8_e5m2": "float8_e5m2"}
+
+
+def _decode_array(tag: str, a: np.ndarray) -> np.ndarray:
+    if not tag:
+        return a
+    import ml_dtypes
+    return a.view(np.dtype(getattr(ml_dtypes, _TAG_TO_DTYPE[tag])))
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        out[f"{prefix}__seq__"] = np.asarray(
+            [len(tree), 1 if isinstance(tree, tuple) else 0])
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        tag, arr = _encode_array(np.asarray(tree))
+        out[prefix.rstrip("/") + tag] = arr
+    return out
+
+
+def _unflatten(flat: dict):
+    # rebuild nested structure from key paths
+    def insert(d, parts, v):
+        if len(parts) == 1:
+            d[parts[0]] = v
+        else:
+            d = d.setdefault(parts[0], {})
+            insert(d, parts[1:], v)
+
+    root: dict = {}
+    for k, v in flat.items():
+        if "::" in k:
+            k, tag = k.rsplit("::", 1)
+            v = _decode_array(tag, v)
+        insert(root, k.split("/"), v)
+
+    def fix(node):
+        if isinstance(node, dict):
+            if "__seq__" in node:
+                n, is_tuple = int(node["__seq__"][0]), int(node["__seq__"][1])
+                seq = [fix(node[str(i)]) for i in range(n)]
+                return tuple(seq) if is_tuple else seq
+            return {k: fix(v) for k, v in node.items()}
+        return node
+
+    return fix(root)
+
+
+def save(path: str, tree, step: int | None = None) -> None:
+    flat = _flatten(jax.device_get(tree))
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
+    os.close(fd)
+    np.savez(tmp, **flat)
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    if step is not None:
+        meta = path + ".meta.json"
+        with open(meta, "w") as f:
+            json.dump({"step": step}, f)
+
+
+def restore(path: str, shardings=None):
+    with np.load(path, allow_pickle=False) as z:
+        flat = {k: z[k] for k in z.files}
+    tree = _unflatten(flat)
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree
+
+
+def latest_step(path: str) -> int | None:
+    meta = path + ".meta.json"
+    if not os.path.exists(meta):
+        return None
+    with open(meta) as f:
+        return json.load(f)["step"]
+
+
+class AsyncCheckpointer:
+    """Snapshot synchronously (device_get), write in background; a bounded
+    queue applies back-pressure instead of dropping checkpoints."""
+
+    def __init__(self, max_pending: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=max_pending)
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._errors: list = []
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            path, tree, step = item
+            try:
+                save(path, tree, step)
+            except Exception as e:  # surfaced on next save()/wait()
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def save(self, path: str, tree, step: int | None = None):
+        if self._errors:
+            raise self._errors.pop()
+        snapshot = jax.device_get(tree)
+        self._q.put((path, snapshot, step))
+
+    def wait(self):
+        self._q.join()
+        if self._errors:
+            raise self._errors.pop()
+
+    def close(self):
+        self._q.put(None)
+        self._thread.join()
+
+
+class PreemptionHandler:
+    """SIGTERM -> set flag; the training loop checkpoints and exits cleanly
+    (what a TPU maintenance event looks like to the worker)."""
+
+    def __init__(self):
+        self.preempted = False
+        try:
+            signal.signal(signal.SIGTERM, self._handler)
+        except ValueError:
+            pass  # non-main thread (tests)
+
+    def _handler(self, signum, frame):
+        self.preempted = True

@@ -1,0 +1,111 @@
+"""Optimizers from scratch (no optax in this environment): AdamW + SGD,
+global-norm clipping, warmup-cosine / linear schedules.
+
+States are pytrees mirroring the params tree, so they shard identically to
+params under pjit (optimizer sharding == param sharding, ZeRO-style when
+params are sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"      # cosine | linear | constant
+
+
+def schedule_value(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "cosine":
+        t = jnp.clip((s - cfg.warmup_steps)
+                     / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "linear":
+        t = jnp.clip((s - cfg.warmup_steps)
+                     / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        decay = 1.0 - t
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), gn
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), p)
+    return {"mu": zeros(params), "nu": zeros(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state, params):
+    step = opt_state["step"] + 1
+    lr = schedule_value(cfg, step)
+    if cfg.clip_norm is not None:
+        grads, gn = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gn = global_norm(grads)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m2 / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v2 / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["mu"])
+    flat_v = treedef.flatten_up_to(opt_state["nu"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_m, "nu": new_v, "step": step}, {"grad_norm": gn, "lr": lr}
+
+
+def sgd_update(lr: float, grads, params):
+    return jax.tree.map(lambda p, g: (p.astype(jnp.float32)
+                                      - lr * g.astype(jnp.float32)).astype(p.dtype),
+                        params, grads)
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig,
+                    compression=None) -> Callable:
+    """Generic train step: value_and_grad -> (optional grad compression) ->
+    AdamW.  ``compression`` is an (encode, decode) pair applied around the DP
+    all-reduce (see training/compression.py)."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if compression is not None:
+            grads = compression(grads)
+        params, opt_state, stats = adamw_update(opt_cfg, grads, opt_state, params)
+        stats["loss"] = loss
+        return params, opt_state, stats
+
+    return train_step

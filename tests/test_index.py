@@ -1,0 +1,113 @@
+"""Truss index (paper §5): component labels, representatives, invalidation."""
+import numpy as np
+
+from repro.core import DynamicGraph, component_labels, representatives
+
+
+def _py_components(edges_phi, k):
+    """Reference CC over edges with phi >= k (union-find)."""
+    parent = {}
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    def union(a, b):
+        parent.setdefault(a, a)
+        parent.setdefault(b, b)
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            parent[ra] = rb
+
+    members = [e for e, p in edges_phi.items() if p >= k]
+    for a, b in members:
+        union(a, b)
+    groups = {}
+    for a, b in members:
+        groups.setdefault(find(a), set()).add((a, b))
+    return sorted(frozenset(g) for g in groups.values())
+
+
+def _jax_components(g, k):
+    lab = np.asarray(component_labels(g.spec, g.state, k))
+    edges = np.asarray(g.state.edges)
+    act = np.asarray(g.state.active)
+    groups = {}
+    for i in range(len(lab)):
+        if act[i] and lab[i] < 2**30:
+            groups.setdefault(int(lab[i]), set()).add((int(edges[i, 0]), int(edges[i, 1])))
+    return sorted(frozenset(v) for v in groups.values())
+
+
+def test_component_labels_match_union_find():
+    rng = np.random.default_rng(2)
+    n = 20
+    edges = [(i, j) for i in range(n) for j in range(i + 1, n) if rng.random() < 0.25]
+    g = DynamicGraph(n, edges)
+    phi = g.phi_dict()
+    for k in range(2, max(phi.values()) + 2):
+        assert _jax_components(g, k) == _py_components(phi, k), k
+
+
+def test_representatives_one_per_component():
+    rng = np.random.default_rng(3)
+    n = 18
+    edges = [(i, j) for i in range(n) for j in range(i + 1, n) if rng.random() < 0.3]
+    g = DynamicGraph(n, edges)
+    phi = g.phi_dict()
+    k = 3
+    rep, lab = representatives(g.spec, g.state, k)
+    rep, lab = np.asarray(rep), np.asarray(lab)
+    comps = {l for l in lab[np.asarray(g.state.active)] if l < 2**30}
+    assert rep.sum() == len(comps)  # exactly one representative per component
+    # representative's label matches its component
+    for i in np.nonzero(rep)[0]:
+        assert lab[i] < 2**30
+
+
+def test_index_invalidation_range():
+    rng = np.random.default_rng(4)
+    n = 16
+    edges = [(i, j) for i in range(n) for j in range(i + 1, n) if rng.random() < 0.35]
+    g = DynamicGraph(n, edges, tracked_ks=(3, 4, 5))
+    # warm cache
+    for k in (3, 4, 5):
+        g.index.query(g.state, k)
+    assert not g.index._dirty
+    e = g.edge_list()[0]
+    g.delete(int(e[0]), int(e[1]))
+    # update must have invalidated the affected k range; queries still correct
+    phi = g.phi_dict()
+    for k in (3, 4, 5):
+        assert _jax_components(g, k) == _py_components(phi, k), k
+
+
+def test_indexed_equals_progressive_queries():
+    """indexedUpdate and progressiveUpdate answer identically (Table 3)."""
+    rng = np.random.default_rng(5)
+    n = 14
+    edges = [(i, j) for i in range(n) for j in range(i + 1, n) if rng.random() < 0.4]
+    g1 = DynamicGraph(n, edges, tracked_ks=(3, 4))
+    g2 = DynamicGraph(n, edges)
+    present = set(map(tuple, edges))
+    for step in range(8):
+        if present and rng.random() < 0.5:
+            e = sorted(present)[rng.integers(len(present))]
+            present.discard(e)
+            g1.delete(*e)
+            g2.delete(*e)
+        else:
+            while True:
+                a, b = rng.integers(0, n, 2)
+                a, b = int(min(a, b)), int(max(a, b))
+                if a != b and (a, b) not in present:
+                    break
+            present.add((a, b))
+            g1.insert(a, b)
+            g2.insert(a, b)
+        for k in (3, 4):
+            idx_ans = _jax_components(g1, k)   # uses (invalidated) cache
+            prog_ans = _jax_components(g2, k)  # recomputed from phi
+            assert idx_ans == prog_ans, (step, k)

@@ -1,0 +1,154 @@
+"""Property-based validation of the paper's §3 theory on random graphs.
+
+Hypothesis drives random graph + update choices; every property is checked
+against the from-scratch decomposition oracle.
+"""
+import numpy as np
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import DynamicGraph, oracle
+
+SET = settings(max_examples=25, deadline=None,
+               suppress_health_check=[HealthCheck.too_slow,
+                                      HealthCheck.data_too_large])
+
+
+def graph_strategy(n_max=11):
+    return st.integers(5, n_max).flatmap(
+        lambda n: st.tuples(
+            st.just(n),
+            st.sets(st.tuples(st.integers(0, n - 1), st.integers(0, n - 1))
+                    .map(lambda e: (min(e), max(e))).filter(lambda e: e[0] != e[1]),
+                    min_size=4, max_size=n * (n - 1) // 2)))
+
+
+def _phi(adj):
+    return oracle.truss_decomposition(adj)
+
+
+def _adj(n, edges):
+    adj = {i: set() for i in range(n)}
+    for a, b in edges:
+        adj[a].add(b)
+        adj[b].add(a)
+    return adj
+
+
+@given(graph_strategy(), st.randoms(use_true_random=False))
+@SET
+def test_obs1_and_lemma2_deletion(ne, rnd):
+    """Observation 1 + Lemma 2: deletion never increases phi; changes <= 1."""
+    n, edges = ne
+    edges = sorted(edges)
+    before = _phi(_adj(n, edges))
+    e = rnd.choice(edges)
+    after = _phi(_adj(n, [x for x in edges if x != e]))
+    for f, p in after.items():
+        assert p <= before[f]
+        assert before[f] - p <= 1, (f, before[f], p)
+
+
+@given(graph_strategy(), st.randoms(use_true_random=False))
+@SET
+def test_obs1_and_lemma2_insertion(ne, rnd):
+    n, edges = ne
+    edges = sorted(edges)
+    candidates = [(i, j) for i in range(n) for j in range(i + 1, n)
+                  if (i, j) not in set(edges)]
+    if not candidates:
+        return
+    e = rnd.choice(candidates)
+    before = _phi(_adj(n, edges))
+    after = _phi(_adj(n, edges + [e]))
+    for f, p in before.items():
+        assert after[f] >= p
+        assert after[f] - p <= 1, (f, p, after[f])
+
+
+@given(graph_strategy(), st.randoms(use_true_random=False))
+@SET
+def test_theorem1_affected_range(ne, rnd):
+    """Deletion only affects phi values in [k_min(e), phi(e)]."""
+    n, edges = ne
+    edges = sorted(edges)
+    adj = _adj(n, edges)
+    before = _phi(adj)
+    e = rnd.choice(edges)
+    a, b = e
+    s = adj[a] & adj[b]
+    partners = [(min(a, w), max(a, w)) for w in s] + [(min(b, w), max(b, w)) for w in s]
+    after = _phi(_adj(n, [x for x in edges if x != e]))
+    changed = {f for f in after if after[f] != before[f]}
+    if not s:
+        assert not changed
+        return
+    kmin = min(before[f] for f in partners)
+    for f in changed:
+        assert kmin <= before[f] <= before[e], (f, before[f], kmin, before[e])
+
+
+@given(graph_strategy(), st.randoms(use_true_random=False))
+@SET
+def test_theorem2_affected_range(ne, rnd):
+    """Insertion only affects phi in [k_min(e), min(|S|+1, k_max(e))]."""
+    n, edges = ne
+    edges = sorted(edges)
+    candidates = [(i, j) for i in range(n) for j in range(i + 1, n)
+                  if (i, j) not in set(edges)]
+    if not candidates:
+        return
+    e = rnd.choice(candidates)
+    a, b = e
+    adj = _adj(n, edges)
+    before = _phi(adj)
+    s = adj[a] & adj[b]
+    partners = [(min(a, w), max(a, w)) for w in s] + [(min(b, w), max(b, w)) for w in s]
+    after = _phi(_adj(n, edges + [e]))
+    changed = {f for f in before if after[f] != before[f]}
+    if not s:
+        assert not changed
+        return
+    kmin = min(before[f] for f in partners)
+    kmax = max(before[f] for f in partners)
+    bound = min(len(s) + 1, kmax)
+    if kmin > len(s) + 1:
+        assert not changed
+        return
+    for f in changed:
+        assert kmin <= before[f] <= bound, (f, before[f], kmin, bound)
+
+
+@given(graph_strategy(), st.randoms(use_true_random=False))
+@SET
+def test_incremental_matches_scratch(ne, rnd):
+    """The JAX frontier-BSP maintenance equals from-scratch decomposition
+    after every update in a random stream."""
+    n, edges = ne
+    edges = sorted(edges)
+    g = DynamicGraph(n, edges)
+    present = set(edges)
+    for _ in range(4):
+        absent = [(i, j) for i in range(n) for j in range(i + 1, n)
+                  if (i, j) not in present]
+        if present and (not absent or rnd.random() < 0.5):
+            e = rnd.choice(sorted(present))
+            present.discard(e)
+            g.delete(*e)
+        elif absent:
+            e = rnd.choice(absent)
+            present.add(e)
+            g.insert(*e)
+        else:
+            continue
+        assert g.phi_dict() == _phi(_adj(n, sorted(present)))
+
+
+@given(graph_strategy())
+@SET
+def test_lemma1_support_bound(ne):
+    """Lemma 1: phi(e) <= sup(e, G) + 2."""
+    n, edges = ne
+    adj = _adj(n, sorted(edges))
+    phi = _phi(adj)
+    for (a, b), p in phi.items():
+        assert p <= len(adj[a] & adj[b]) + 2

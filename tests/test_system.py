@@ -1,0 +1,129 @@
+"""End-to-end behaviour tests for the truss engine, including the paper's own
+worked examples (Figs. 2, 4, 5)."""
+import numpy as np
+import pytest
+
+from repro.core import (DynamicGraph, GraphSpec, decompose, from_edge_list,
+                        oracle)
+
+
+def k_clique_edges(nodes):
+    return [(a, b) for i, a in enumerate(nodes) for b in nodes[i + 1:]]
+
+
+def test_fig2_deletion_tight_range():
+    """K3, K4, K5 joined at edge (a,b): deleting (a,b) decrements every other
+    edge by exactly 1; affected range [k_min, phi(e)] = [3, 5] is tight."""
+    a, b = 0, 1
+    k5 = k_clique_edges([a, b, 2, 3, 4])
+    k4 = k_clique_edges([a, b, 5, 6])
+    k3 = k_clique_edges([a, b, 7])
+    edges = sorted(set(k5 + k4 + k3))
+    g = DynamicGraph(8, edges)
+    before = g.phi_dict()
+    assert before[(0, 1)] == 5
+    assert min(before.values()) == 3 and max(before.values()) == 5
+    g.delete(a, b)
+    after = g.phi_dict()
+    for e, p in before.items():
+        if e == (0, 1):
+            continue
+        assert after[e] == p - 1, (e, p, after[e])
+
+
+def test_fig5_insertion_no_effect():
+    """k_min > |S|+1: inserting (a,b) affects no existing edge (paper Fig. 5)."""
+    a, b, c = 0, 1, 2
+    tri_ac = k_clique_edges([a, c, 3])          # phi 3 around (a,c)
+    k4_bc = k_clique_edges([b, c, 4, 5])        # phi 4 around (b,c)
+    edges = sorted(set(tri_ac + k4_bc))
+    g = DynamicGraph(6, edges)
+    before = g.phi_dict()
+    g.insert(a, b)
+    after = g.phi_dict()
+    for e, p in before.items():
+        assert after[e] == p, e
+    assert after[(0, 1)] == 3  # (a,b) forms one triangle with (a,c),(b,c)
+
+
+def test_insert_then_delete_roundtrip():
+    rng = np.random.default_rng(7)
+    n = 14
+    edges = [(i, j) for i in range(n) for j in range(i + 1, n) if rng.random() < 0.4]
+    g = DynamicGraph(n, edges)
+    before = g.phi_dict()
+    pair = next((i, j) for i in range(n) for j in range(i + 1, n)
+                if (i, j) not in before)
+    g.insert(*pair)
+    g.delete(*pair)
+    assert g.phi_dict() == before
+
+
+def test_dynamic_stream_matches_oracle():
+    rng = np.random.default_rng(3)
+    n = 13
+    edges = [(i, j) for i in range(n) for j in range(i + 1, n) if rng.random() < 0.4]
+    g = DynamicGraph(n, edges)
+    orc = oracle.Oracle(n, edges)
+    present = set(map(tuple, edges))
+    absent = [(i, j) for i in range(n) for j in range(i + 1, n)
+              if (i, j) not in present]
+    rng.shuffle(absent)
+    for _ in range(14):
+        if present and (not absent or rng.random() < 0.5):
+            e = sorted(present)[rng.integers(len(present))]
+            present.discard(e)
+            absent.append(e)
+            g.delete(*e)
+            orc.delete(*e)
+        else:
+            e = absent.pop()
+            present.add(e)
+            g.insert(*e)
+            orc.insert(*e)
+        orc.check()
+        assert g.phi_dict() == orc.phi
+
+
+def test_capacity_growth():
+    g = DynamicGraph(10, [(0, 1)], d_max=2, e_cap=2)
+    for v in range(2, 8):
+        g.insert(0, v)  # exceeds d_max=2 and e_cap=2 -> reallocation paths
+    assert len(g.edge_list()) == 7
+    ref = oracle.truss_decomposition(
+        {i: set(j for a, b in g.edge_list() for j in ((b,) if a == i else (a,) if b == i else ()))
+         for i in range(10)})
+    assert g.phi_dict() == ref
+
+
+def test_decompose_methods_agree():
+    rng = np.random.default_rng(11)
+    n = 24
+    edges = [(i, j) for i in range(n) for j in range(i + 1, n) if rng.random() < 0.3]
+    spec = GraphSpec(n_nodes=n, d_max=n, e_cap=len(edges))
+    st = from_edge_list(spec, np.asarray(edges))
+    phi_s = np.asarray(decompose(spec, st, "sorted"))
+    phi_b = np.asarray(decompose(spec, st, "bitmap"))
+    np.testing.assert_array_equal(phi_s, phi_b)
+
+
+def test_batch_vs_progressive_agree():
+    """paper Table 3: batchUpdate and progressiveUpdate converge to the same
+    truss numbers on the same update stream."""
+    from repro.data.streams import make_update_stream
+
+    rng = np.random.default_rng(5)
+    n = 16
+    edges = [(i, j) for i in range(n) for j in range(i + 1, n) if rng.random() < 0.35]
+    stream = make_update_stream(np.asarray(edges), n, 10, seed=9)
+
+    prog = DynamicGraph(n, edges)
+    for op, a, b in stream:
+        if op == 1:
+            prog.insert(int(a), int(b))
+        else:
+            prog.delete(int(a), int(b))
+
+    batch = DynamicGraph(n, edges)
+    batch.batch_update_then_decompose([tuple(map(int, r)) for r in stream])
+    assert prog.phi_dict() == batch.phi_dict()
