@@ -1,0 +1,119 @@
+"""Batch-size sweep: fusedBatchUpdate vs the sequential per-update scan.
+
+The ISSUE-1 acceptance experiment: apply one fixed 256-update mixed stream
+to the ENRON_SMALL replica, chunked at batch sizes {1, 16, 64, 256}, through
+
+  * ``apply_updates``  — the baseline ``lax.scan`` over single-edge
+    Algorithms 1/2 (one frontier-loop launch per update), and
+  * ``DynamicGraph.apply_batch(strategy="fused")`` — the batched engine
+    (one structural pass + one shared-frontier peel per chunk).
+
+Reports microseconds per update (jit warm, compile excluded) and verifies
+the final phi values of every path against the from-scratch oracle.
+
+    PYTHONPATH=src python -m benchmarks.batch_update
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.configs import truss_paper
+from repro.core import DynamicGraph, maintenance, oracle
+from repro.data.streams import iter_batches, make_update_stream
+from repro.data.synthetic import powerlaw_graph
+
+BATCH_SIZES = (1, 16, 64, 256)
+N_UPDATES = 256
+
+
+def _oracle_phi(n_nodes: int, edges, stream):
+    present = {(int(u), int(v)) for u, v in edges}
+    for op, a, b in stream:
+        key = (min(int(a), int(b)), max(int(a), int(b)))
+        present.add(key) if op == 1 else present.discard(key)
+    adj = {i: set() for i in range(n_nodes)}
+    for a, b in present:
+        adj[a].add(b)
+        adj[b].add(a)
+    return oracle.truss_decomposition(adj)
+
+
+def _time_scan(workload, edges, stream):
+    import jax.numpy as jnp
+
+    ops = jnp.asarray(stream[:, 0], jnp.int32)
+    aa = jnp.asarray(stream[:, 1], jnp.int32)
+    bb = jnp.asarray(stream[:, 2], jnp.int32)
+    g = DynamicGraph(workload.n_nodes, edges)
+    st = maintenance.apply_updates(g.spec, g.state, ops, aa, bb)
+    st.phi.block_until_ready()  # warm the jit cache
+    t0 = time.perf_counter()
+    st = maintenance.apply_updates(g.spec, g.state, ops, aa, bb)
+    st.phi.block_until_ready()
+    dt = time.perf_counter() - t0
+    act = np.asarray(st.active)
+    phi = {tuple(map(int, e)): int(p)
+           for e, p in zip(np.asarray(st.edges)[act], np.asarray(st.phi)[act])}
+    return dt, phi
+
+
+def _time_fused(workload, edges, stream, bsz):
+    def run():
+        g = DynamicGraph(workload.n_nodes, edges)
+        t0 = time.perf_counter()
+        for chunk in iter_batches(stream, bsz):
+            g.apply_batch([tuple(map(int, r)) for r in chunk],
+                          strategy="fused")
+        g.state.phi.block_until_ready()
+        return time.perf_counter() - t0, g
+
+    run()                 # warm the jit cache (all chunk shapes)
+    dt, g = run()
+    return dt, g.phi_dict()
+
+
+def main(rows: list, quick: bool = True):
+    import jax
+
+    w = truss_paper.ENRON_SMALL
+    edges = powerlaw_graph(w.n_nodes, w.m_per_node, seed=0)
+    stream = make_update_stream(edges, w.n_nodes, N_UPDATES, seed=1)
+
+    ref = _oracle_phi(w.n_nodes, edges, stream)
+    t_scan, phi_scan = _time_scan(w, edges, stream)
+    ok = phi_scan == ref
+    rows.append((f"batch/{w.name}/u{N_UPDATES}/scan",
+                 t_scan * 1e6 / N_UPDATES, f"total_s={t_scan:.3f};exact={ok}"))
+    print(f"  scan (sequential apply_updates): {t_scan:.2f}s "
+          f"({t_scan * 1e6 / N_UPDATES:.0f} us/update) exact={ok}")
+
+    for bsz in BATCH_SIZES:
+        # Small batches pay one whole-engine launch per few updates; in
+        # quick mode keep their walltime sane by timing a stream prefix.
+        n_up = min(N_UPDATES, max(4 * bsz, 16)) if quick else N_UPDATES
+        prefix = stream[:n_up]
+        jax.clear_caches()  # isolate sweep points from each other's cache
+        t_fused, phi_fused = _time_fused(w, edges, prefix, bsz)
+        ok = phi_fused == _oracle_phi(w.n_nodes, edges, prefix)
+        rows.append((f"batch/{w.name}/u{n_up}/fused_B{bsz}",
+                     t_fused * 1e6 / n_up,
+                     f"total_s={t_fused:.3f};exact={ok}"))
+        print(f"  fusedBatchUpdate B={bsz:>3} (u={n_up}): {t_fused:.2f}s "
+              f"({t_fused * 1e6 / n_up:.0f} us/update) "
+              f"speedup_vs_scan={(t_scan / N_UPDATES) / (t_fused / n_up):.2f}x"
+              f" exact={ok}")
+    return rows
+
+
+if __name__ == "__main__":
+    rows = []
+    main(rows)
+    for r in rows:
+        print(",".join(map(str, r)))

@@ -19,18 +19,22 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sweep (slow on CPU)")
     ap.add_argument("--only", default=None,
-                    help="comma list: truss,affected,kernels,distributed,roofline")
+                    help="comma list: truss,batch,affected,kernels,distributed,roofline")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import (affected_set, distributed_bench, kernels_bench,
-                            roofline, truss_maintenance)
+    from benchmarks import (affected_set, batch_update, distributed_bench,
+                            kernels_bench, roofline, truss_maintenance)
 
-    selected = set((args.only or "truss,affected,kernels,distributed,roofline")
+    selected = set((args.only or
+                    "truss,batch,affected,kernels,distributed,roofline")
                    .split(","))
     rows: list = []
     if "truss" in selected:
         print("== truss maintenance (paper Figs. 8-10) ==")
         truss_maintenance.main(rows, quick=not args.full)
+    if "batch" in selected:
+        print("== fused batch-update sweep (ISSUE-1) ==")
+        batch_update.main(rows, quick=not args.full)
     if "affected" in selected:
         print("== affected-set locality (Lemmas 6/8) ==")
         affected_set.main(rows)

@@ -1,10 +1,12 @@
 """Paper §6 experiments (Figs. 8-10): batchUpdate vs progressiveUpdate vs
-indexedUpdate across #updates and k, on CPU-scaled replicas of the paper's
-three datasets (Table 2 structure; see configs/truss_paper.py).
+indexedUpdate vs fusedBatchUpdate across #updates and k, on CPU-scaled
+replicas of the paper's three datasets (Table 2 structure; see
+configs/truss_paper.py).
 
 Protocol mirrors the paper: pre-generate one update stream per dataset and
 reuse it for every approach; measure wall time of (apply updates + answer a
-k-truss query).
+k-truss query).  fusedBatchUpdate applies the whole stream as one batched
+``apply_batch`` call (ISSUE-1 engine) instead of one frontier loop per edge.
 """
 from __future__ import annotations
 
@@ -65,12 +67,23 @@ def run_dataset(workload, n_updates_list, k, rows, seed=0):
         g.index.query(g.state, k)  # answered from (range-invalidated) cache
         t_idx = time.perf_counter() - t0
 
+        # --- fusedBatchUpdate: whole stream in one batched pass ------------
+        ups_list = [tuple(map(int, r)) for r in ups]
+        g = DynamicGraph(workload.n_nodes, edges)
+        g.apply_batch(ups_list, strategy="fused")  # warm the jit cache
+        g = DynamicGraph(workload.n_nodes, edges)
+        t0 = time.perf_counter()
+        g.apply_batch(ups_list, strategy="fused")
+        _query_progressive(g, k)
+        t_fused = time.perf_counter() - t0
+
         for name, t in (("batchUpdate", t_batch), ("progressiveUpdate", t_prog),
-                        ("indexedUpdate", t_idx)):
+                        ("indexedUpdate", t_idx), ("fusedBatchUpdate", t_fused)):
             rows.append((f"truss/{workload.name}/k{k}/u{n_up}/{name}",
                          t * 1e6 / max(n_up, 1), f"total_s={t:.3f}"))
         print(f"  {workload.name} k={k} updates={n_up}: "
-              f"batch={t_batch:.2f}s prog={t_prog:.2f}s idx={t_idx:.2f}s")
+              f"batch={t_batch:.2f}s prog={t_prog:.2f}s idx={t_idx:.2f}s "
+              f"fused={t_fused:.2f}s")
 
 
 def main(rows: list, quick: bool = True):

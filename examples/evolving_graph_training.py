@@ -22,7 +22,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import DynamicGraph
 from repro.data import sampler
-from repro.data.streams import GraphUpdateStream, OP_INSERT
+from repro.data.streams import GraphUpdateStream
 from repro.data.synthetic import powerlaw_graph
 from repro.models import gnn
 from repro.training.optimizer import AdamWConfig, adamw_init, make_train_step
@@ -56,11 +56,9 @@ def main():
     pad_edges = 4 * len(edges)
     for rnd in range(6):
         ups = stream.next()
-        for op, a, b in ups:
-            if op == OP_INSERT:
-                g.insert(int(a), int(b))
-            else:
-                g.delete(int(a), int(b))
+        # one fused batch pass per round (auto falls back to per-update
+        # Algorithms 1/2 when the chunk is tiny)
+        g.apply_batch([tuple(map(int, r)) for r in ups], strategy="auto")
         batch = truss_subgraph_batch(g, k, d_feat, cfg.n_classes,
                                      pad_nodes=n, pad_edges=pad_edges, seed=rnd)
         batch = {kk: jnp.asarray(v) for kk, v in batch.items()}

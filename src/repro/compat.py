@@ -1,0 +1,24 @@
+"""Version-compatibility shims for JAX API drift.
+
+``jax.shard_map`` only exists as a top-level export (with the ``check_vma``
+kwarg) on newer JAX; on 0.4.x the same transform lives in
+``jax.experimental.shard_map`` and the kwarg is ``check_rep``.  Everything in
+this repo goes through :func:`shard_map` below so the call sites stay
+version-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """Uniform wrapper over jax.shard_map / jax.experimental.shard_map."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check})

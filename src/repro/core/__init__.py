@@ -1,20 +1,22 @@
 """Core truss engine: the paper's contribution as a composable JAX module."""
 from .graph import (GraphSpec, GraphState, empty_state, from_edge_list,
                     lookup_edge, insert_edge_struct, delete_edge_struct,
-                    triangle_partners, support, support_all,
-                    build_bitmap, support_all_bitmap)
+                    apply_edge_batch_struct, triangle_partners, support,
+                    support_all, build_bitmap, support_all_bitmap)
 from .decomposition import decompose, decompose_and_set
 from .maintenance import (insert_edge_maintain, delete_edge_maintain,
                           apply_updates, OP_INSERT, OP_DELETE)
+from .batch import batch_maintain
 from .index import TrussIndex, component_labels, representatives
 from .dynamic import DynamicGraph
 from . import oracle
 
 __all__ = [
     "GraphSpec", "GraphState", "empty_state", "from_edge_list", "lookup_edge",
-    "insert_edge_struct", "delete_edge_struct", "triangle_partners", "support",
-    "support_all", "decompose", "decompose_and_set", "build_bitmap",
-    "support_all_bitmap", "insert_edge_maintain", "delete_edge_maintain",
-    "apply_updates", "OP_INSERT", "OP_DELETE", "TrussIndex",
+    "insert_edge_struct", "delete_edge_struct", "apply_edge_batch_struct",
+    "triangle_partners", "support", "support_all", "decompose",
+    "decompose_and_set", "build_bitmap", "support_all_bitmap",
+    "insert_edge_maintain", "delete_edge_maintain", "apply_updates",
+    "batch_maintain", "OP_INSERT", "OP_DELETE", "TrussIndex",
     "component_labels", "representatives", "DynamicGraph", "oracle",
 ]

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from .graph import GraphSpec
 
 _INF = jnp.int32(2**30)
@@ -87,10 +88,10 @@ def make_distributed_decompose(spec: GraphSpec, mesh: Mesh,
              zero_bm, zero_bm, jnp.asarray(False)))
         return jnp.where(active, phi, 0)
 
-    mapped = jax.shard_map(local_fn, mesh=mesh,
-                           in_specs=(P(ax, None), P(ax)),
-                           out_specs=P(ax),
-                           check_vma=False)
+    mapped = shard_map(local_fn, mesh=mesh,
+                       in_specs=(P(ax, None), P(ax)),
+                       out_specs=P(ax),
+                       check=False)
     return jax.jit(mapped)
 
 

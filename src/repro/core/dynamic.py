@@ -10,7 +10,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from . import decomposition, maintenance
+from . import batch, decomposition, maintenance
 from .graph import GraphSpec, GraphState, from_edge_list, lookup_edge
 from .index import TrussIndex
 
@@ -31,6 +31,9 @@ class DynamicGraph:
         self.support_method = support_method
         self.state = decomposition.decompose_and_set(self.spec, self.state, support_method)
         self.index = TrussIndex(self.spec, tracked_ks)
+        # Host mirror of the present-edge set, kept in sync by every update
+        # path so batch netting never forces a device->host transfer.
+        self._present = {(int(min(u, v)), int(max(u, v))) for u, v in edges}
 
     # -- capacity ------------------------------------------------------------
     def _ensure_capacity(self, a: int, b: int, inserting: bool):
@@ -44,7 +47,7 @@ class DynamicGraph:
         if need_realloc:
             self._grow(extra_edge=(a, b))
 
-    def _grow(self, extra_edge=None):
+    def _grow(self, extra_edge=None, min_d: int = 0, min_e: int = 0):
         """Double capacities and rebuild state (host path, rare)."""
         el = self.edge_list()
         deg = np.bincount(np.asarray(el).reshape(-1), minlength=self.spec.n_nodes) if len(el) else np.zeros(self.spec.n_nodes)
@@ -53,8 +56,8 @@ class DynamicGraph:
             deg[extra_edge[1]] += 1
         new_spec = GraphSpec(
             n_nodes=self.spec.n_nodes,
-            d_max=max(self.spec.d_max * 2, int(deg.max(initial=0)) + 4),
-            e_cap=max(self.spec.e_cap * 2, len(el) + 16),
+            d_max=max(self.spec.d_max * 2, int(deg.max(initial=0)) + 4, min_d + 4),
+            e_cap=max(self.spec.e_cap * 2, len(el) + 16, min_e + 16),
         )
         phi_old = self.phi_dict()
         self.spec = new_spec
@@ -74,15 +77,22 @@ class DynamicGraph:
     def insert(self, a: int, b: int):
         """progressiveUpdate insertion (Algorithm 2)."""
         self._ensure_capacity(a, b, inserting=True)
-        stats = self._range_of(a, b, inserting=True)
+        _lo, hi = self._range_of(a, b, inserting=True)
         self.state = maintenance.insert_edge_maintain(self.spec, self.state, a, b)
-        self.index.invalidate(*stats)
+        # Other edges' phi moves only inside the Theorem-2 range, but the
+        # inserted edge itself joins (and can merge components of) every
+        # level k <= phi(e) <= hi + 1 — invalidate from the bottom.
+        self.index.invalidate(2, max(hi, 1))
+        self._present.add((min(a, b), max(a, b)))
 
     def delete(self, a: int, b: int):
         """progressiveUpdate deletion (Algorithm 1)."""
-        stats = self._range_of(a, b, inserting=False)
+        _lo, hi = self._range_of(a, b, inserting=False)
         self.state = maintenance.delete_edge_maintain(self.spec, self.state, a, b)
-        self.index.invalidate(*stats)
+        # The deleted edge leaves (and can split components of) every level
+        # k <= phi(e), not just the Theorem-1 phi range.
+        self.index.invalidate(2, max(hi, 1))
+        self._present.discard((min(a, b), max(a, b)))
 
     def _range_of(self, a: int, b: int, inserting: bool):
         """Theorem 1/2 affected range for index invalidation."""
@@ -98,15 +108,95 @@ class DynamicGraph:
         phi_e = int(self.state.phi[int(slot)]) if bool(found) else 0
         return (kmin, phi_e)
 
+    def apply_batch(self, updates, strategy: str = "auto",
+                    fused_threshold: int = 8):
+        """Apply a batch of (op, a, b) updates with truss maintenance.
+
+        ``fusedBatchUpdate``: the batch is first *netted* on the host (an
+        edge inserted then deleted inside one batch cancels — phi depends
+        only on the final edge set), then applied either
+
+        * ``progressive`` — Algorithms 1/2 per netted update (the paper's
+          per-update path; best for tiny batches where per-update affected
+          sets are small and disjoint), or
+        * ``fused`` — one ``batch.batch_maintain`` call: one vectorized
+          structural pass, one shared frontier, one peel loop.
+
+        ``auto`` picks fused once the netted batch reaches
+        ``fused_threshold`` updates (paper Table 3 framing: progressive
+        wins at small update counts, batch processing at large ones).
+        """
+        ups = [(int(op), int(a), int(b)) for op, a, b in updates]
+        if not ups:
+            return
+        present0 = self._present
+        cur = set(present0)
+        for op, a, b in ups:
+            if a == b:
+                raise ValueError("self-loops are not allowed")
+            key = (min(a, b), max(a, b))
+            if op == maintenance.OP_INSERT:
+                if key in cur:
+                    raise ValueError(f"insert of present edge {key}")
+                cur.add(key)
+            else:
+                if key not in cur:
+                    raise ValueError(f"delete of absent edge {key}")
+                cur.discard(key)
+        dels = sorted(present0 - cur)
+        inss = sorted(cur - present0)
+        n_net = len(dels) + len(inss)
+        if n_net == 0:
+            return
+        if strategy == "auto":
+            strategy = "fused" if n_net >= fused_threshold else "progressive"
+        if strategy == "progressive":
+            for a, b in dels:
+                self.delete(a, b)
+            for a, b in inss:
+                self.insert(a, b)
+            return
+        if strategy != "fused":
+            raise ValueError(f"unknown strategy {strategy!r}")
+        final = np.asarray(sorted(cur), np.int64).reshape(-1, 2)
+        deg = (np.bincount(final.reshape(-1), minlength=self.spec.n_nodes)
+               if len(final) else np.zeros(self.spec.n_nodes, np.int64))
+        if len(cur) > self.spec.e_cap or deg.max(initial=0) > self.spec.d_max:
+            self._grow(min_d=int(deg.max(initial=0)), min_e=len(cur))
+        bsz = 1
+        while bsz < max(len(dels), len(inss)):
+            bsz <<= 1
+
+        def pad(pairs):
+            arr = np.zeros((bsz, 2), np.int32)
+            msk = np.zeros(bsz, bool)
+            if pairs:
+                arr[:len(pairs)] = np.asarray(pairs, np.int32)
+                msk[:len(pairs)] = True
+            return (jnp.asarray(arr[:, 0]), jnp.asarray(arr[:, 1]),
+                    jnp.asarray(msk))
+
+        da, db, dm = pad(dels)
+        ia, ib, im = pad(inss)
+        self.state, _lo, hi = batch.batch_maintain(
+            self.spec, self.state, da, db, dm, ia, ib, im,
+            method=self.support_method)
+        self._present = cur
+        # Updated edges join/leave every level below the range too (they can
+        # merge or split components there), so invalidate [2, hi + 1]; the
+        # mixed-batch fallback returns hi = +inf, i.e. invalidate everything.
+        self.index.invalidate(2, max(int(hi), 1))
+
     def batch_update_then_decompose(self, updates):
         """batchUpdate baseline: apply structural updates, re-decompose."""
-        el = {tuple(e) for e in self.edge_list()}
+        el = set(self._present)
         for op, a, b in updates:
             key = (min(a, b), max(a, b))
             if op == maintenance.OP_INSERT:
                 el.add(key)
             else:
                 el.discard(key)
+        self._present = set(el)
         el = sorted(el)
         deg = np.bincount(np.asarray(el).reshape(-1), minlength=self.spec.n_nodes) if el else np.zeros(self.spec.n_nodes)
         if len(el) > self.spec.e_cap or deg.max(initial=0) > self.spec.d_max:

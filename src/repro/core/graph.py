@@ -184,6 +184,101 @@ def delete_edge_struct(spec: GraphSpec, st: GraphState, a: jax.Array, b: jax.Arr
     return st._replace(edges=edges, active=active, phi=phi, nbr=nbr, eid=eid, deg=deg), slot
 
 
+def apply_edge_batch_struct(spec: GraphSpec, st: GraphState,
+                            del_u: jax.Array, del_v: jax.Array, del_valid: jax.Array,
+                            ins_u: jax.Array, ins_v: jax.Array, ins_valid: jax.Array):
+    """Vectorized multi-edge structural update (no phi maintenance).
+
+    All six arrays are length-B (padded; masked rows are ignored).  Instead of
+    B sequential shift-edits, every affected adjacency row is rebuilt in one
+    batched pass: deleted entries are overwritten with the sort-last sentinel,
+    inserted neighbors are appended in a candidate block, and a single
+    ``argsort`` per row restores the sorted-row invariant for ``nbr``/``eid``
+    jointly.
+
+    Caller guarantees (checked host-side by ``DynamicGraph.apply_batch``):
+    valid deletions exist, valid insertions are absent, no edge pair appears
+    twice across the batch, and the post-update graph fits (e_cap, d_max).
+
+    Returns ``(state, ins_slots int32[B])`` (slot ``e_cap`` on masked rows).
+    """
+    n, d, e_cap = spec.n_nodes, spec.d_max, spec.e_cap
+    bsz = del_u.shape[0]
+    du = jnp.minimum(del_u, del_v).astype(jnp.int32)
+    dv = jnp.maximum(del_u, del_v).astype(jnp.int32)
+    iu = jnp.minimum(ins_u, ins_v).astype(jnp.int32)
+    iv = jnp.maximum(ins_u, ins_v).astype(jnp.int32)
+
+    # -- edge-slot table: free deleted slots, then claim slots for inserts --
+    duc = jnp.where(del_valid, du, 0)
+    dvc = jnp.where(del_valid, dv, 0)
+    d_slot, d_found = jax.vmap(lambda a, b: lookup_edge(spec, st, a, b))(duc, dvc)
+    vdel = del_valid & d_found
+    tgt_d = jnp.where(vdel, d_slot, e_cap)
+    edges = st.edges.at[tgt_d].set(n, mode="drop")
+    active = st.active.at[tgt_d].set(False, mode="drop")
+    phi = st.phi.at[tgt_d].set(0, mode="drop")
+
+    free_idx = jnp.nonzero(~active, size=bsz, fill_value=e_cap)[0].astype(jnp.int32)
+    rank = jnp.cumsum(ins_valid.astype(jnp.int32)) - 1
+    ins_slots = jnp.where(ins_valid, free_idx[jnp.clip(rank, 0, bsz - 1)],
+                          jnp.int32(e_cap))
+    tgt_i = jnp.where(ins_valid, ins_slots, e_cap)
+    edges = edges.at[tgt_i].set(jnp.stack([iu, iv], 1), mode="drop")
+    active = active.at[tgt_i].set(True, mode="drop")
+
+    # -- rebuild every affected adjacency row ------------------------------
+    nodes = jnp.concatenate([jnp.where(vdel, du, n), jnp.where(vdel, dv, n),
+                             jnp.where(ins_valid, iu, n),
+                             jnp.where(ins_valid, iv, n)])
+    uniq = jnp.unique(nodes, size=4 * bsz, fill_value=n)  # sorted, padded with n
+    r = 4 * bsz
+    rows_nbr = st.nbr[jnp.minimum(uniq, n - 1)]           # [R, D]
+    rows_eid = st.eid[jnp.minimum(uniq, n - 1)]
+
+    def row_of(x):
+        return jnp.minimum(jnp.searchsorted(uniq, x), r - 1).astype(jnp.int32)
+
+    delmask = jnp.zeros((r, d), bool)
+
+    def mark_deleted(delmask, xs, others):
+        i = row_of(xs)                                    # [B]
+        pos = jax.vmap(jnp.searchsorted)(rows_nbr[i], others)
+        posc = jnp.minimum(pos, d - 1)
+        hit = vdel & (rows_nbr[i, posc] == others)
+        return delmask.at[jnp.where(hit, i, r), posc].set(True, mode="drop")
+
+    delmask = mark_deleted(delmask, du, dv)
+    delmask = mark_deleted(delmask, dv, du)
+    ext_nbr = jnp.where(delmask, n, rows_nbr)
+    ext_eid = jnp.where(delmask, e_cap, rows_eid)
+
+    cand_nbr = jnp.full((r, bsz), n, jnp.int32)
+    cand_eid = jnp.full((r, bsz), e_cap, jnp.int32)
+    col = jnp.arange(bsz)
+    iu_row = jnp.where(ins_valid, row_of(iu), r)
+    iv_row = jnp.where(ins_valid, row_of(iv), r)
+    cand_nbr = cand_nbr.at[iu_row, col].set(iv, mode="drop")
+    cand_nbr = cand_nbr.at[iv_row, col].set(iu, mode="drop")
+    cand_eid = cand_eid.at[iu_row, col].set(ins_slots, mode="drop")
+    cand_eid = cand_eid.at[iv_row, col].set(ins_slots, mode="drop")
+
+    ext_nbr = jnp.concatenate([ext_nbr, cand_nbr], axis=1)  # [R, D+B]
+    ext_eid = jnp.concatenate([ext_eid, cand_eid], axis=1)
+    order = jnp.argsort(ext_nbr, axis=1)
+    new_nbr = jnp.take_along_axis(ext_nbr, order, axis=1)[:, :d]
+    new_eid = jnp.take_along_axis(ext_eid, order, axis=1)[:, :d]
+
+    tgt_rows = jnp.where(uniq < n, uniq, n)
+    nbr = st.nbr.at[tgt_rows].set(new_nbr, mode="drop")
+    eid = st.eid.at[tgt_rows].set(new_eid, mode="drop")
+    deg = st.deg.at[tgt_rows].set(
+        jnp.sum(new_nbr < n, axis=1).astype(jnp.int32), mode="drop")
+    st = st._replace(edges=edges, active=active, phi=phi, nbr=nbr, eid=eid,
+                     deg=deg)
+    return st, ins_slots
+
+
 # ---------------------------------------------------------------------------
 # Triangle partner enumeration — the shared primitive behind support,
 # localSupport (Alg. 1 step 5) and localSupport2 (Alg. 3).

@@ -223,6 +223,17 @@ class Oracle:
                         queue.append(g)
         return marked, unchanged
 
+    def apply(self, updates):
+        """Sequential replay of a (op, a, b) stream — op 1 inserts, 0
+        deletes (data.streams convention).  Ground truth for the batched
+        engine: phi depends only on the final edge set, so a netted batch
+        must match this replay edge-for-edge."""
+        for op, a, b in updates:
+            if int(op) == 1:
+                self.insert(int(a), int(b))
+            else:
+                self.delete(int(a), int(b))
+
     # -- queries -------------------------------------------------------------
     def k_truss_edges(self, k: int):
         return {e for e, p in self.phi.items() if p >= k}

@@ -34,6 +34,17 @@ def make_update_stream(edges: np.ndarray, n_nodes: int, n_updates: int,
     return np.asarray(out, np.int64)
 
 
+def iter_batches(stream: np.ndarray, batch_size: int):
+    """Yield consecutive ``[<=B, 3]`` chunks of an update stream, in order.
+
+    The fused engine (``DynamicGraph.apply_batch``) consumes one chunk per
+    call; yielding views keeps every approach on the identical stream."""
+    if batch_size <= 0:
+        raise ValueError("batch_size must be positive")
+    for s in range(0, len(stream), batch_size):
+        yield stream[s:s + batch_size]
+
+
 class GraphUpdateStream:
     """Resumable wrapper used by the evolving-graph training example."""
 

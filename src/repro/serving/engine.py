@@ -49,8 +49,19 @@ class DecodeEngine:
         self.queue.append(req)
 
     def _fill_slots(self):
+        """Admit queued requests only at a generation boundary (all slots
+        empty): every slot shares one position counter and one KV cache, so
+        a request joining mid-stream would decode against another request's
+        cache.  When the batch drains, rewind and start a fresh generation."""
+        if any(r is not None for r in self.slots):
+            return
+        if not self.queue:
+            return
+        if self.pos:
+            self.pos = 0
+            self.cache = transformer.init_cache(self.cfg, self.b, self.max_seq)
         for i in range(self.b):
-            if self.slots[i] is None and self.queue:
+            if self.queue:
                 self.slots[i] = self.queue.pop(0)
 
     def _next_token_host(self, i: int) -> int:
@@ -82,7 +93,7 @@ class DecodeEngine:
         self.pos += 1
         for i in active:
             r = self.slots[i]
-            if self.pos <= len(r.prompt):
+            if self.pos < len(r.prompt):
                 continue  # still prefilling this slot's prompt
             r.out.append(int(next_tok[i]))
             if len(r.out) >= r.max_new:

@@ -27,6 +27,7 @@ def test_registry_complete():
     assert skipped == 4  # 4 full-attention LMs skip long_500k
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", LM_ARCHS)
 def test_lm_smoke_train_step(arch_id):
     cfg = get_config(arch_id).smoke
@@ -55,6 +56,7 @@ def test_lm_smoke_decode(arch_id):
     assert np.isfinite(np.asarray(logits)).all()
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", GNN_ARCHS)
 def test_gnn_smoke_train_step(arch_id):
     arch = get_config(arch_id)
@@ -81,6 +83,7 @@ def test_gin_molecule_graph_classification():
     assert np.isfinite(np.asarray(logits)).all()
 
 
+@pytest.mark.slow
 def test_xdeepfm_smoke_train_and_serve():
     arch = get_config("xdeepfm")
     cfg = arch.smoke

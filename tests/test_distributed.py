@@ -44,6 +44,7 @@ print("ok")
 """)
 
 
+@pytest.mark.slow
 def test_sharded_lm_train_step_runs():
     """Tiny LM train step executes (not just compiles) on a (2,4) mesh with
     the production sharding rules, and matches the single-device loss."""
@@ -84,12 +85,13 @@ def test_compressed_psum_matches_fp32():
     run_py("""
 import jax, numpy as np, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.launch.mesh import make_test_mesh
 from repro.training.compression import compressed_psum
 
 mesh = make_test_mesh((4,), ("data",))
 x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 256)).astype(np.float32))
-fn = jax.jit(jax.shard_map(lambda v: compressed_psum(v[0], "data"),
+fn = jax.jit(shard_map(lambda v: compressed_psum(v[0], "data"),
     mesh=mesh, in_specs=P("data", None), out_specs=P()))
 got = np.asarray(fn(x))
 exp = np.asarray(x.sum(0))

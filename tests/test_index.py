@@ -84,6 +84,34 @@ def test_index_invalidation_range():
         assert _jax_components(g, k) == _py_components(phi, k), k
 
 
+def test_index_cache_never_stale_below_update_range():
+    """An update changes membership/connectivity at every level up to its
+    phi, not just inside the Theorem-1/2 range — the cached labels must
+    match a fresh recompute at all tracked ks after each update."""
+    rng = np.random.default_rng(7)
+    n = 14
+    edges = [(i, j) for i in range(n) for j in range(i + 1, n) if rng.random() < 0.35]
+    g = DynamicGraph(n, edges, tracked_ks=(2, 3, 4, 5))
+    present = set(map(tuple, edges))
+    for step in range(10):
+        if present and rng.random() < 0.5:
+            e = sorted(present)[rng.integers(len(present))]
+            present.discard(e)
+            g.delete(*e)
+        else:
+            while True:
+                a, b = rng.integers(0, n, 2)
+                a, b = int(min(a, b)), int(max(a, b))
+                if a != b and (a, b) not in present:
+                    break
+            present.add((a, b))
+            g.insert(a, b)
+        for k in (2, 3, 4, 5):
+            cached = np.asarray(g.index.query(g.state, k))
+            fresh = np.asarray(component_labels(g.spec, g.state, k))
+            assert np.array_equal(cached, fresh), (step, k)
+
+
 def test_indexed_equals_progressive_queries():
     """indexedUpdate and progressiveUpdate answer identically (Table 3)."""
     rng = np.random.default_rng(5)

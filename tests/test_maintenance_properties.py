@@ -4,9 +4,16 @@ Hypothesis drives random graph + update choices; every property is checked
 against the from-scratch decomposition oracle.
 """
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (CI full lane runs these)")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import DynamicGraph, oracle
+
+# Property sweeps recompile per random graph spec — full-lane only.
+pytestmark = pytest.mark.slow
 
 SET = settings(max_examples=25, deadline=None,
                suppress_health_check=[HealthCheck.too_slow,
