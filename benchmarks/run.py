@@ -19,14 +19,16 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sweep (slow on CPU)")
     ap.add_argument("--only", default=None,
-                    help="comma list: truss,batch,affected,kernels,distributed,roofline")
+                    help="comma list: truss,batch,service,affected,kernels,"
+                         "distributed,roofline")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (affected_set, batch_update, distributed_bench,
-                            kernels_bench, roofline, truss_maintenance)
+                            kernels_bench, roofline, service_throughput,
+                            truss_maintenance)
 
     selected = set((args.only or
-                    "truss,batch,affected,kernels,distributed,roofline")
+                    "truss,batch,service,affected,kernels,distributed,roofline")
                    .split(","))
     rows: list = []
     if "truss" in selected:
@@ -35,6 +37,9 @@ def main() -> None:
     if "batch" in selected:
         print("== fused batch-update sweep (ISSUE-1) ==")
         batch_update.main(rows, quick=not args.full)
+    if "service" in selected:
+        print("== truss service throughput (ISSUE-2) ==")
+        service_throughput.main(rows, quick=not args.full)
     if "affected" in selected:
         print("== affected-set locality (Lemmas 6/8) ==")
         affected_set.main(rows)
@@ -48,13 +53,22 @@ def main() -> None:
         print("== roofline (from dry-run artifacts) ==")
         roofline.main(rows)
 
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results.csv")
+    # A partial run (--only) merges into the existing csv by row name so the
+    # perf trajectory keeps every section's latest numbers.
+    merged: dict[str, str] = {}
+    if args.only and os.path.exists(out):
+        with open(out) as f:
+            for line in f.read().splitlines()[1:]:
+                if line.strip():
+                    merged[line.split(",", 1)[0]] = line
+    for name, us, derived in rows:
+        merged[name] = f"{name},{us:.1f},{derived}"
     print("\nname,us_per_call,derived")
     lines = ["name,us_per_call,derived"]
-    for name, us, derived in rows:
-        line = f"{name},{us:.1f},{derived}"
+    for line in merged.values():
         print(line)
         lines.append(line)
-    out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results.csv")
     with open(out, "w") as f:
         f.write("\n".join(lines) + "\n")
 

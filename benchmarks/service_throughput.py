@@ -1,0 +1,115 @@
+"""Service throughput: queries/sec and p50/p99 latency vs write-batch size.
+
+The ISSUE-2 acceptance experiment on the ENRON_SMALL replica: one fixed
+mixed update stream drives two ``TrussService`` configurations —
+
+  * ``indexed``    — queries served from the maintained ``TrussIndex``
+                     (labels + representatives cached per generation), and
+  * ``recompute``  — ``indexed=False``: every query re-runs the label
+                     propagation from phi (progressiveUpdate's query path),
+
+each at write-batch (flush_every) sizes {4, 16, 64}.  Per tick the service
+ingests one write batch and then answers a hot-read query mix (repeated
+membership/representative reads at the workload's query ks — the access
+pattern an online community service sees).  Reported: us/query, p50/p99
+query latency, write+query wall time, and the indexed-vs-recompute speedup
+per batch size.
+
+    PYTHONPATH=src python -m benchmarks.service_throughput
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.configs import truss_paper
+from repro.data.streams import iter_batches, make_update_stream
+from repro.data.synthetic import powerlaw_graph
+from repro.service import (COMMUNITY, MAX_K, MEMBERS, REPRESENTATIVES,
+                           QueryRequest, TrussService)
+
+BATCH_SIZES = (4, 16, 64)
+
+
+def _query_mix(ks, probes) -> list[QueryRequest]:
+    """Hot-read mix per generation: community lookups (the service's main
+    query — label-backed) from several seed nodes on two levels, plus
+    representative enumeration, membership, and point phi lookups.  Many
+    label reads per level per generation is the serving regime the index is
+    for (ROADMAP: read-heavy traffic between write batches)."""
+    reqs = []
+    for k in (ks[0], ks[1]):
+        reqs.append(QueryRequest(REPRESENTATIVES, k=k))
+        for u, v in probes:
+            reqs += [QueryRequest(COMMUNITY, k=k, node=u),
+                     QueryRequest(COMMUNITY, k=k, edge=(u, v))]
+        reqs.append(QueryRequest(MEMBERS, k=k))
+    reqs += [QueryRequest(MAX_K, edge=e) for e in probes]
+    return reqs
+
+
+def _drive(workload, edges, stream, flush_every, indexed, ks):
+    svc = TrussService(workload.n_nodes, edges, tracked_ks=ks,
+                       flush_every=flush_every, indexed=indexed)
+    el = svc.graph.edge_list()
+    probes = [tuple(map(int, el[i])) for i in (0, len(el) // 2, len(el) - 1)]
+    for req in _query_mix(ks, probes):  # warm jit caches outside the timing
+        svc.handle(req)
+    svc.graph.index.invalidate_all()
+
+    lat: list[float] = []
+    t_total0 = time.perf_counter()
+    for chunk in iter_batches(stream, flush_every):
+        svc.submit_many([tuple(map(int, r)) for r in chunk])
+        svc.flush()
+        # async dispatch: block here so device-side maintenance is billed to
+        # the write path, not to the first query that happens to touch phi
+        svc.graph.state.phi.block_until_ready()
+        for req in _query_mix(ks, probes):
+            t0 = time.perf_counter()
+            svc.handle(req)
+            lat.append(time.perf_counter() - t0)
+    t_total = time.perf_counter() - t_total0
+    return np.asarray(lat), t_total
+
+
+def main(rows: list, quick: bool = True):
+    w = truss_paper.ENRON_SMALL
+    ks = w.query_ks[:2]
+    n_updates = 128 if quick else 512
+    edges = powerlaw_graph(w.n_nodes, w.m_per_node, seed=0)
+    stream = make_update_stream(edges, w.n_nodes, n_updates, seed=1)
+
+    for bsz in BATCH_SIZES:
+        t_query = {}
+        for mode, indexed in (("indexed", True), ("recompute", False)):
+            lat, t_total = _drive(w, edges, stream, bsz, indexed, ks)
+            t_query[mode] = lat.sum()
+            qps = len(lat) / max(lat.sum(), 1e-9)
+            p50, p99 = np.percentile(lat * 1e3, [50, 99])
+            rows.append((f"service/{w.name}/B{bsz}/{mode}",
+                         lat.mean() * 1e6,
+                         f"p50_ms={p50:.2f};p99_ms={p99:.2f};qps={qps:.0f};"
+                         f"total_s={t_total:.3f}"))
+            print(f"  B={bsz:>3} {mode:>9}: {lat.mean() * 1e6:7.0f} us/query "
+                  f"p50={p50:.2f}ms p99={p99:.2f}ms qps={qps:.0f} "
+                  f"(write+query {t_total:.2f}s)")
+        speedup = t_query["recompute"] / max(t_query["indexed"], 1e-9)
+        rows.append((f"service/{w.name}/B{bsz}/speedup_indexed", speedup,
+                     f"recompute_over_indexed_query_time"))
+        print(f"  B={bsz:>3} indexed speedup over recompute-per-query: "
+              f"{speedup:.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    rows = []
+    main(rows)
+    for r in rows:
+        print(",".join(map(str, r)))

@@ -1,5 +1,8 @@
-"""Dev smoke: core truss engine vs oracle on small random graphs."""
+"""Dev smoke: core truss engine vs oracle on small random graphs, plus a
+~30s end-to-end service smoke (ingest, query, snapshot, restore, re-answer).
+"""
 import sys
+import tempfile
 import numpy as np
 
 sys.path.insert(0, "src")
@@ -60,7 +63,49 @@ def run_one(seed):
                              if got.get(k) != exp.get(k)})
 
 
+def smoke_service(n_updates=60, n_queries=20, seed=0):
+    """Service lifecycle: ingest N updates in fused batches, answer M
+    queries, snapshot, crash, restore, re-answer — restored answers must be
+    identical and phi must match the oracle replay."""
+    from repro.data.streams import GraphUpdateStream
+    from repro.service import (MEMBERS, REPRESENTATIVES, QueryRequest,
+                               TrussService, TrussStore)
+
+    rng = np.random.default_rng(seed)
+    n = 24
+    edges = rand_graph(rng, n, 0.25)
+    stream = GraphUpdateStream(np.asarray(edges), n, chunk=6, seed=seed + 1)
+    with tempfile.TemporaryDirectory() as root:
+        svc = TrussService(n, edges, tracked_ks=(3, 4), flush_every=8,
+                           store=TrussStore(root))
+        acked = []
+        for _ in range(n_updates // 6):
+            ups = [tuple(map(int, r)) for r in stream.next()]
+            svc.submit_many(ups)
+            acked += ups
+        reqs = [QueryRequest(MEMBERS, k=3 + i % 2) for i in range(n_queries // 2)]
+        reqs += [QueryRequest(REPRESENTATIVES, k=3 + i % 2)
+                 for i in range(n_queries - len(reqs))]
+        before = [{tuple(map(int, e)) for e in svc.handle(r).edges} for r in reqs]
+        svc.snapshot(stream_state=stream.state_dict())
+        del svc
+
+        restored = TrussService.restore(TrussStore(root))
+        after = [{tuple(map(int, e)) for e in restored.handle(r).edges} for r in reqs]
+        assert before == after, "restored service answers diverged"
+        orc = oracle.Oracle(n, edges)
+        orc.apply(acked)
+        assert restored.graph.phi_dict() == orc.phi, "restored phi != oracle"
+        s2 = GraphUpdateStream(np.asarray(edges), n, chunk=6, seed=seed + 1)
+        s2.load_state_dict(restored.stream_state)
+        restored.submit_many([tuple(map(int, r)) for r in s2.next()])
+        restored.flush()
+    print(f"service smoke ok ({len(acked)} updates, {len(reqs)} queries, "
+          f"snapshot/restore exact)")
+
+
 for s in range(15):
     run_one(s)
     print(f"seed {s} ok")
+smoke_service()
 print("ALL OK")

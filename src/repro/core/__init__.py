@@ -7,7 +7,8 @@ from .decomposition import decompose, decompose_and_set
 from .maintenance import (insert_edge_maintain, delete_edge_maintain,
                           apply_updates, OP_INSERT, OP_DELETE)
 from .batch import batch_maintain
-from .index import TrussIndex, component_labels, representatives
+from .index import (TrussIndex, component_labels, representatives,
+                    representatives_from_labels)
 from .dynamic import DynamicGraph
 from . import oracle
 
@@ -18,5 +19,6 @@ __all__ = [
     "decompose_and_set", "build_bitmap", "support_all_bitmap",
     "insert_edge_maintain", "delete_edge_maintain", "apply_updates",
     "batch_maintain", "OP_INSERT", "OP_DELETE", "TrussIndex",
-    "component_labels", "representatives", "DynamicGraph", "oracle",
+    "component_labels", "representatives", "representatives_from_labels",
+    "DynamicGraph", "oracle",
 ]

@@ -35,6 +35,22 @@ class DynamicGraph:
         # path so batch netting never forces a device->host transfer.
         self._present = {(int(min(u, v)), int(max(u, v))) for u, v in edges}
 
+    @classmethod
+    def from_state(cls, spec: GraphSpec, state: GraphState,
+                   support_method: str = "sorted",
+                   tracked_ks: tuple[int, ...] = ()) -> "DynamicGraph":
+        """Rebuild a wrapper around already-maintained arrays (checkpoint
+        restore): phi is trusted as-is, no re-decomposition."""
+        g = cls.__new__(cls)
+        g.spec = spec
+        g.state = GraphState(*(jnp.asarray(x) for x in state))
+        g.support_method = support_method
+        g.index = TrussIndex(spec, tracked_ks)
+        act = np.asarray(g.state.active)
+        edges = np.asarray(g.state.edges)[act]
+        g._present = {(int(min(u, v)), int(max(u, v))) for u, v in edges}
+        return g
+
     # -- capacity ------------------------------------------------------------
     def _ensure_capacity(self, a: int, b: int, inserting: bool):
         need_realloc = False

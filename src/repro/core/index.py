@@ -68,17 +68,24 @@ def component_labels(spec: GraphSpec, st: GraphState, k) -> jax.Array:
 
 
 @partial(jax.jit, static_argnames=("spec",))
-def representatives(spec: GraphSpec, st: GraphState, k):
-    """(rep_mask[E_cap], edge_label[E_cap]): one min-slot edge per component."""
-    lab = component_labels(spec, st, k)
+def representatives_from_labels(spec: GraphSpec, lab: jax.Array) -> jax.Array:
+    """rep_mask[E_cap] from precomputed edge labels: one min-slot edge per
+    component.  A cheap scatter-min — no label propagation — so a cached
+    label array answers representative queries without re-running the
+    while-loop."""
     member = lab < _INF
     # min edge slot per label: scatter-min over a node-indexed table
     slot = jnp.arange(spec.e_cap, dtype=jnp.int32)
     per_label = jnp.full((spec.n_nodes + 1,), _INF, jnp.int32)
     tgt = jnp.where(member, jnp.minimum(lab, spec.n_nodes), spec.n_nodes)
     per_label = per_label.at[tgt].min(jnp.where(member, slot, _INF), mode="promise_in_bounds")
-    rep = member & (per_label[jnp.minimum(lab, spec.n_nodes)] == slot)
-    return rep, lab
+    return member & (per_label[jnp.minimum(lab, spec.n_nodes)] == slot)
+
+
+def representatives(spec: GraphSpec, st: GraphState, k):
+    """(rep_mask[E_cap], edge_label[E_cap]): one min-slot edge per component."""
+    lab = component_labels(spec, st, k)
+    return representatives_from_labels(spec, lab), lab
 
 
 class TrussIndex:
@@ -93,7 +100,14 @@ class TrussIndex:
         self.spec = spec
         self.tracked = tuple(tracked_ks)
         self._labels: dict[int, jax.Array] = {}
+        self._reps: dict[int, jax.Array] = {}
         self._dirty: set[int] = set(self.tracked)
+
+    def track(self, k: int):
+        """Add a level to the tracked set (service queries auto-track)."""
+        if k not in self.tracked:
+            self.tracked = self.tracked + (k,)
+            self._dirty.add(k)
 
     def invalidate(self, lo: int, hi: int):
         """An update affected phi range [lo, hi] => levels k <= hi+1 with
@@ -109,10 +123,15 @@ class TrussIndex:
         """Edge component labels of the k-truss level (cached)."""
         if k in self._dirty or k not in self._labels:
             self._labels[k] = component_labels(self.spec, st, k)
+            self._reps.pop(k, None)  # labels and reps invalidate together
             self._dirty.discard(k)
         return self._labels[k]
 
     def query_representatives(self, st: GraphState, k: int):
-        lab = self.query(st, k)
-        rep, _ = representatives(self.spec, st, k)
-        return rep, lab
+        """(rep_mask, labels) for level k, cached alongside the labels and
+        invalidated together.  Clean labels answer both without re-running
+        the label propagation; a dirty level pays it once for both."""
+        lab = self.query(st, k)  # recomputes (and pops reps) iff dirty
+        if k not in self._reps:
+            self._reps[k] = representatives_from_labels(self.spec, lab)
+        return self._reps[k], lab

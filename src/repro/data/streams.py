@@ -78,4 +78,25 @@ class GraphUpdateStream:
         return np.asarray(out, np.int64)
 
     def state_dict(self):
-        return {"seed": self.seed, "step": self.step}
+        """Everything needed to resume the stream exactly: the rng is keyed
+        by (seed, step) per chunk, and the evolving present-edge set is
+        captured explicitly so restore needs no replay."""
+        present = np.asarray(sorted(self._present), np.int64).reshape(-1, 2)
+        return {"seed": self.seed, "step": self.step, "present": present}
+
+    def load_state_dict(self, state):
+        """Restore so the next ``next()`` yields the chunk the saved stream
+        would have yielded.  Legacy two-key dicts (no ``present``) are
+        fast-forwarded deterministically: chunks 0..step-1 are regenerated
+        from the constructor edge set to rebuild the present set."""
+        seed, step = int(state["seed"]), int(state["step"])
+        if "present" in state:
+            self.seed, self.step = seed, step
+            self._present = {(int(u), int(v))
+                             for u, v in np.asarray(state["present"]).reshape(-1, 2)}
+            return self
+        self.seed, self.step = seed, 0
+        self._present = {(int(u), int(v)) for u, v in self.edges}
+        while self.step < step:
+            self.next()
+        return self

@@ -1,0 +1,11 @@
+"""Online truss query service: WAL-backed store + indexed query engine."""
+from .api import (COMMUNITY, MAX_K, MEMBERS, QUERY_KINDS, REPRESENTATIVES,
+                  QueryRequest, QueryResponse, WriteAck, WriteRequest)
+from .engine import TrussService
+from .store import TrussStore
+
+__all__ = [
+    "TrussService", "TrussStore", "QueryRequest", "QueryResponse",
+    "WriteRequest", "WriteAck", "QUERY_KINDS", "MEMBERS", "COMMUNITY",
+    "MAX_K", "REPRESENTATIVES",
+]

@@ -1,0 +1,66 @@
+"""Request/response types for the truss query service.
+
+The service multiplexes four query kinds (paper §5's index queries) against
+one maintained ``TrussIndex``; every response carries the generation it was
+answered at, making the consistency model explicit: reads happen at
+generation boundaries, after the service's own pending writes flushed
+(read-your-writes).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# query kinds
+MEMBERS = "members"                  # all edges of the k-truss
+COMMUNITY = "community"              # k-truss component of a node or edge
+MAX_K = "max_k"                      # phi(e): largest k with e in a k-truss
+REPRESENTATIVES = "representatives"  # one edge per k-truss component
+
+QUERY_KINDS = (MEMBERS, COMMUNITY, MAX_K, REPRESENTATIVES)
+
+
+@dataclasses.dataclass(frozen=True)
+class WriteRequest:
+    """One edge update; ``op`` follows ``data.streams`` (1=insert, 0=delete)."""
+    op: int
+    a: int
+    b: int
+
+
+@dataclasses.dataclass(frozen=True)
+class WriteAck:
+    """Write is WAL-appended (durable against process crash; fsynced to
+    disk at the next generation flush or snapshot) and will commit in
+    generation ``gen``; ``wal_index`` is its position in the log."""
+    gen: int
+    wal_index: int
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryRequest:
+    kind: str
+    k: int = 3
+    node: int | None = None                  # COMMUNITY seed (node form)
+    edge: tuple[int, int] | None = None      # COMMUNITY seed / MAX_K target
+
+    def __post_init__(self):
+        if self.kind not in QUERY_KINDS:
+            raise ValueError(f"unknown query kind {self.kind!r}")
+        if self.kind == COMMUNITY and self.node is None and self.edge is None:
+            raise ValueError("community query needs a node or an edge")
+        if self.kind == MAX_K and self.edge is None:
+            raise ValueError("max_k query needs an edge")
+
+
+@dataclasses.dataclass
+class QueryResponse:
+    request: QueryRequest
+    gen: int                         # generation the answer is consistent at
+    edges: np.ndarray | None = None  # [m, 2] for edge-set answers
+    value: int | None = None         # MAX_K answer
+
+    @property
+    def n_edges(self) -> int:
+        return 0 if self.edges is None else len(self.edges)

@@ -1,0 +1,258 @@
+"""TrussService — the online truss query engine (ROADMAP north star shape).
+
+One long-lived object multiplexes a write stream and a query API over a
+single maintained truss oracle:
+
+* **Writes** are acknowledged immediately: validated against the logical
+  edge set (present edges + pending effects), WAL-appended with the
+  generation they will commit in, and queued.  An admission policy flushes
+  the queue as **one fused batch** (``DynamicGraph.apply_batch``, netted)
+  every ``flush_every`` writes — the paper's batch-amortized streaming
+  ingestion (Jakkula & Karypis framing).
+* **Reads** happen only at generation boundaries: every query first flushes
+  pending writes, so a client always reads its own writes and never observes
+  a half-applied batch (same discipline as the slot-admission fix in
+  ``serving.engine.DecodeEngine._fill_slots`` — no request joins
+  mid-generation).
+* **Durability** is delegated to ``TrussStore``: crash at any point, then
+  ``TrussService.restore(store)`` = last snapshot + WAL-tail replay, which
+  reconstructs phi and component labels exactly (tested against the
+  pure-Python oracle at randomized kill points).
+
+``indexed=False`` turns the service into the recompute-per-query baseline
+(progressiveUpdate's query path) — used by ``benchmarks/service_throughput``
+to measure what the index buys.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import DynamicGraph, component_labels
+from ..core import representatives as core_representatives
+from ..core.graph import GraphSpec, GraphState, lookup_edge
+from ..core.maintenance import OP_INSERT
+from .api import (COMMUNITY, MAX_K, MEMBERS, REPRESENTATIVES, QueryRequest,
+                  QueryResponse, WriteAck, WriteRequest)
+from ..core import index as truss_index
+from .store import TrussStore
+
+_INF = int(truss_index._INF)  # non-member label sentinel (host-side int)
+
+
+class TrussService:
+    def __init__(self, n_nodes: int, edges=(), *, tracked_ks=(),
+                 flush_every: int = 16, strategy: str = "auto",
+                 store: TrussStore | None = None, indexed: bool = True,
+                 d_max: int | None = None, e_cap: int | None = None,
+                 support_method: str = "sorted"):
+        if store is not None and (store.wal_len
+                                  or os.path.exists(store.snap_path)):
+            raise ValueError(
+                "store already holds state — use TrussService.restore(store)")
+        self.graph = DynamicGraph(n_nodes, edges, d_max=d_max, e_cap=e_cap,
+                                  support_method=support_method,
+                                  tracked_ks=tuple(tracked_ks))
+        self.store = store
+        self.flush_every = int(flush_every)
+        self.strategy = strategy
+        self.indexed = indexed
+        self.gen = 0                 # committed generation
+        self._pending: list = []     # acked, not yet applied
+        self._view = set(self.graph._present)  # present + pending effects
+        self.stream_state = None     # input-stream state from a snapshot
+        if store is not None:
+            self.snapshot()          # baseline: restore never needs gen 0 WAL
+
+    # -- writes ---------------------------------------------------------------
+    def submit(self, op: int, a: int, b: int) -> WriteAck:
+        """Acknowledge one update.  Validation runs against the *logical*
+        view (committed + pending), so an ack is a commitment: the write is
+        durable in the WAL and will apply at the next generation boundary."""
+        op, a, b = int(op), int(a), int(b)
+        if a == b:
+            raise ValueError("self-loops are not allowed")
+        key = (min(a, b), max(a, b))
+        if op == OP_INSERT:
+            if key in self._view:
+                raise ValueError(f"insert of present edge {key}")
+        elif key not in self._view:
+            raise ValueError(f"delete of absent edge {key}")
+        # WAL first: if the append fails (disk full, closed store) the view
+        # and pending queue are untouched and the submit can be retried
+        wal_index = (self.store.append(self.gen + 1, [(op, a, b)])
+                     if self.store is not None else -1)
+        if op == OP_INSERT:
+            self._view.add(key)
+        else:
+            self._view.discard(key)
+        ack = WriteAck(gen=self.gen + 1, wal_index=wal_index)
+        self._pending.append((op, a, b))
+        if len(self._pending) >= self.flush_every:
+            self.flush()
+        return ack
+
+    def submit_many(self, updates) -> list[WriteAck]:
+        """Per-record submit so WAL generation tags track auto-flush
+        boundaries exactly (replay regroups by tag)."""
+        return [self.submit(op, a, b) for op, a, b in updates]
+
+    def handle_write(self, req: WriteRequest) -> WriteAck:
+        """Typed-request form of ``submit`` (mirror of ``handle``)."""
+        return self.submit(req.op, req.a, req.b)
+
+    def flush(self) -> int:
+        """Commit pending writes as one netted fused batch; bump generation.
+        No-op when nothing is pending.  Returns the committed generation."""
+        if not self._pending:
+            return self.gen
+        if self.store is not None:
+            self.store.fsync()
+        self.graph.apply_batch(self._pending, strategy=self.strategy)
+        self._pending = []
+        self.gen += 1
+        return self.gen
+
+    # -- queries (read-your-writes: flush first) ------------------------------
+    def _labels(self, k: int) -> np.ndarray:
+        if self.indexed:
+            self.graph.index.track(k)
+            return np.asarray(self.graph.index.query(self.graph.state, k))
+        return np.asarray(component_labels(self.graph.spec, self.graph.state, k))
+
+    def k_truss_members(self, k: int) -> np.ndarray:
+        """[m, 2] edges with phi >= k."""
+        self.flush()
+        return self.graph.k_truss(k)
+
+    def max_k(self, a: int, b: int) -> int:
+        """phi(e): the largest k such that edge (a, b) is in a k-truss."""
+        self.flush()
+        u, v = min(int(a), int(b)), max(int(a), int(b))
+        slot, found = lookup_edge(self.graph.spec, self.graph.state,
+                                  jnp.int32(u), jnp.int32(v))
+        return int(self.graph.state.phi[int(slot)]) if bool(found) else 0
+
+    def community_of(self, k: int, node: int | None = None,
+                     edge: tuple[int, int] | None = None) -> np.ndarray:
+        """[m, 2] edges of the k-truss component containing ``node`` or
+        ``edge`` (empty when the seed is not in any k-truss).  Connectivity
+        is node-sharing, so a node belongs to at most one component."""
+        self.flush()
+        lab = self._labels(k)
+        edges = np.asarray(self.graph.state.edges)
+        member = np.asarray(self.graph.state.active) & (lab < _INF)
+        if edge is not None:
+            u, v = min(int(edge[0]), int(edge[1])), max(int(edge[0]), int(edge[1]))
+            hit = member & (edges[:, 0] == u) & (edges[:, 1] == v)
+        else:
+            hit = member & ((edges[:, 0] == int(node)) | (edges[:, 1] == int(node)))
+        if not hit.any():
+            return np.zeros((0, 2), edges.dtype)
+        target = lab[hit].min()
+        return edges[member & (lab == target)]
+
+    def representatives(self, k: int) -> np.ndarray:
+        """[c, 2] one representative (min-slot) edge per k-truss component."""
+        self.flush()
+        if self.indexed:
+            self.graph.index.track(k)
+            rep, _ = self.graph.index.query_representatives(self.graph.state, k)
+        else:
+            rep, _ = core_representatives(self.graph.spec, self.graph.state, k)
+        return np.asarray(self.graph.state.edges)[np.asarray(rep)]
+
+    def handle(self, req: QueryRequest) -> QueryResponse:
+        """Dispatch one typed query (the CLI/benchmark entry point)."""
+        if req.kind == MEMBERS:
+            edges = self.k_truss_members(req.k)
+        elif req.kind == COMMUNITY:
+            edges = self.community_of(req.k, node=req.node, edge=req.edge)
+        elif req.kind == MAX_K:
+            value = self.max_k(*req.edge)
+            return QueryResponse(req, self.gen, value=value)
+        elif req.kind == REPRESENTATIVES:
+            edges = self.representatives(req.k)
+        else:
+            raise ValueError(f"unknown query kind {req.kind!r}")
+        # self.gen is read *after* the query flushed (read-your-writes)
+        return QueryResponse(req, self.gen, edges=edges)
+
+    # -- durability -----------------------------------------------------------
+    def snapshot(self, stream_state: dict | None = None) -> str:
+        """Flush, then checkpoint (spec, state, gen, WAL high-water mark,
+        tracked levels[, input-stream state]) atomically.  The store then
+        compacts the WAL prefix the snapshot covers; restore replays only
+        the tail past the high-water mark."""
+        if self.store is None:
+            raise ValueError("service has no store")
+        self.flush()
+        self.store.fsync()
+        spec = self.graph.spec
+        tree = {
+            "spec": [spec.n_nodes, spec.d_max, spec.e_cap],
+            "state": tuple(self.graph.state),
+            "gen": self.gen,
+            "wal_len": self.store.wal_len,
+            "tracked": [int(k) for k in self.graph.index.tracked],
+        }
+        if stream_state is not None:
+            tree["stream"] = stream_state
+        self.store.snapshot(tree)
+        return self.store.snap_path
+
+    @classmethod
+    def restore(cls, store: TrussStore, *, flush_every: int = 16,
+                strategy: str = "auto", indexed: bool = True,
+                support_method: str = "sorted") -> "TrussService":
+        """Last snapshot + WAL-tail replay => the exact pre-crash oracle."""
+        tree = store.load_snapshot()
+        if tree is None:
+            raise ValueError(f"no snapshot in {store.root}")
+        n, d, e = (int(x) for x in tree["spec"])
+        state = GraphState(*tree["state"])
+        svc = cls.__new__(cls)
+        svc.graph = DynamicGraph.from_state(
+            GraphSpec(n, d, e), state, support_method,
+            tuple(int(k) for k in tree["tracked"]))
+        svc.store = store
+        svc.flush_every = int(flush_every)
+        svc.strategy = strategy
+        svc.indexed = indexed
+        svc.gen = int(tree["gen"])
+        svc._pending = []
+        svc._view = set(svc.graph._present)
+        svc.stream_state = tree.get("stream")
+        svc._replay(store.read_wal(start=int(tree["wal_len"])))
+        return svc
+
+    def _replay(self, tail):
+        """Apply WAL-tail records grouped by their generation tag — the same
+        batch boundaries the live service flushed at, so the replayed path
+        runs the identical netted ``apply_batch`` sequence."""
+        group: list = []
+        group_gen = None
+        for gen, op, a, b in tail:
+            if group_gen is not None and gen != group_gen:
+                self.graph.apply_batch(group, strategy=self.strategy)
+                self.gen = group_gen
+                group = []
+            group_gen = gen
+            group.append((op, a, b))
+        if group:
+            self.graph.apply_batch(group, strategy=self.strategy)
+            self.gen = group_gen
+        self._view = set(self.graph._present)
+
+    # -- introspection --------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "gen": self.gen,
+            "n_edges": len(self.graph._present),
+            "pending": len(self._pending),
+            "wal_len": self.store.wal_len if self.store else 0,
+            "tracked_ks": tuple(self.graph.index.tracked),
+            "max_truss": self.graph.max_truss(),
+        }

@@ -1,0 +1,174 @@
+"""Durable state for the truss service: write-ahead log + snapshot.
+
+The WAL is the source of truth for writes: every acknowledged update is
+appended (with the generation it will commit in) *before* it is applied to
+the in-memory graph, and the log is fsynced at every generation flush and
+snapshot.  A process crash at any point therefore loses nothing that was
+acked; an OS/power failure additionally bounds the loss to writes acked
+since the last generation boundary (appends between boundaries sit in the
+OS page cache).
+A snapshot checkpoints the full oracle state — ``GraphSpec`` capacities,
+``GraphState`` arrays (edges/active/phi/nbr/eid/deg), committed generation,
+and the WAL high-water mark — through ``training.checkpoint`` (atomic rename,
+dtype-tagged ``np.savez``), so recovery is
+
+    restore last snapshot  +  replay the WAL tail past its high-water mark
+
+and lands on the *exact* phi the live service had (Wang & Cheng's
+out-of-core framing: truss state that survives the process).
+
+A successful snapshot also **compacts** the WAL: the covered prefix is
+dropped by atomically replacing the log with a ``# base <n>`` header (the
+count of compacted records) so record indices stay global while restart
+cost is O(tail since last snapshot), not O(write history).
+
+Layout of a store directory::
+
+    <root>/wal.log        optional "# base <n>" header, then append-only
+                          "gen op a b" records, one per line
+    <root>/snapshot.npz   latest checkpoint (atomic-renamed into place)
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+from ..training import checkpoint
+
+_SNAPSHOT = "snapshot.npz"
+_WAL = "wal.log"
+_BASE_PREFIX = "# base "
+
+
+class TrussStore:
+    """WAL + snapshot directory. One writer (the service); any reader."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.wal_path = os.path.join(root, _WAL)
+        self.snap_path = os.path.join(root, _SNAPSHOT)
+        self.base = 0     # records compacted away into the snapshot
+        self.wal_len = 0  # global record count (base + records on disk)
+        if os.path.exists(self.wal_path):
+            # Count complete records; an OS/power failure can tear the final
+            # append, so truncate a malformed tail rather than letting the
+            # next append concatenate onto half a record (recovery then
+            # bounds the loss to the torn record, as the model above states).
+            valid_bytes = 0
+            with open(self.wal_path, "rb") as f:
+                for i, line in enumerate(f):
+                    if (i == 0 and line.endswith(b"\n")
+                            and line.startswith(_BASE_PREFIX.encode())):
+                        self.base = int(line.split()[2])
+                        valid_bytes += len(line)
+                        continue
+                    if not line.endswith(b"\n") or not self._parse(line):
+                        break
+                    valid_bytes += len(line)
+                    self.wal_len += 1
+            self.wal_len += self.base
+            if valid_bytes < os.path.getsize(self.wal_path):
+                with open(self.wal_path, "rb+") as f:
+                    f.truncate(valid_bytes)
+        self._wal_f = open(self.wal_path, "a")
+
+    @staticmethod
+    def _parse(line) -> tuple[int, int, int, int] | None:
+        parts = line.split()
+        if len(parts) != 4:
+            return None
+        try:
+            return tuple(int(x) for x in parts)
+        except ValueError:
+            return None
+
+    @staticmethod
+    def _fsync_path(path: str):
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
+    # -- WAL -----------------------------------------------------------------
+    def append(self, gen: int, records) -> int:
+        """Append ``(op, a, b)`` records committing in generation ``gen``.
+        Returns the (global) WAL index of the first record appended.  A
+        failed append (e.g. disk full) rolls the file back to the last
+        record boundary, so a retry can never concatenate onto a torn
+        half-record."""
+        start = self.wal_len
+        offset = self._wal_f.tell()
+        try:
+            for op, a, b in records:
+                self._wal_f.write(f"{int(gen)} {int(op)} {int(a)} {int(b)}\n")
+            self._wal_f.flush()
+        except Exception:
+            try:
+                self._wal_f.close()
+            except Exception:
+                pass
+            with open(self.wal_path, "rb+") as f:
+                f.truncate(offset)
+            self._wal_f = open(self.wal_path, "a")
+            raise
+        self.wal_len += len(records)
+        return start
+
+    def fsync(self):
+        """Force acknowledged records to disk (called at flush/snapshot)."""
+        os.fsync(self._wal_f.fileno())
+
+    def read_wal(self, start: int = 0) -> list[tuple[int, int, int, int]]:
+        """``(gen, op, a, b)`` records from global WAL index ``start`` on
+        (``start`` below the compaction base yields the tail that still
+        exists).  Stops at the first malformed record — by construction only
+        a torn tail."""
+        if not os.path.exists(self.wal_path):
+            return []
+        out = []
+        with open(self.wal_path) as f:
+            idx = self.base
+            for i, line in enumerate(f):
+                if i == 0 and line.startswith(_BASE_PREFIX):
+                    continue
+                rec = self._parse(line)
+                if rec is None:
+                    break
+                if idx >= start:
+                    out.append(rec)
+                idx += 1
+        return out
+
+    # -- snapshots -----------------------------------------------------------
+    def snapshot(self, tree: dict):
+        """Checkpoint the service state tree (caller stamps ``wal_len``),
+        then compact: the snapshot is the authoritative prefix, so the log
+        restarts as a header-only file at the new base.  Snapshot data and
+        the new header are fsynced *before* the old WAL prefix is dropped —
+        a power failure can never lose both."""
+        checkpoint.save(self.snap_path, tree)
+        self._fsync_path(self.snap_path)
+        self._fsync_path(self.root)  # persist checkpoint.save's rename
+        self._compact(self.wal_len)
+
+    def _compact(self, base: int):
+        self._wal_f.close()
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".waltmp")
+        with os.fdopen(fd, "w") as f:
+            f.write(f"{_BASE_PREFIX}{int(base)}\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.wal_path)
+        self._fsync_path(self.root)  # persist the rename
+        self.base = base
+        self._wal_f = open(self.wal_path, "a")
+
+    def load_snapshot(self) -> dict | None:
+        if not os.path.exists(self.snap_path):
+            return None
+        return checkpoint.restore(self.snap_path)
+
+    def close(self):
+        self._wal_f.close()

@@ -71,7 +71,11 @@ def run(loop_cfg: LoopConfig, opt_cfg: AdamWConfig, loss_fn: Callable,
 
     if restored is not None:
         params, opt_state = restored["params"], restored["opt_state"]
-        if hasattr(stream, "seed"):
+        if hasattr(stream, "load_state_dict"):
+            # GraphUpdateStream & co.: restores the evolving present-edge
+            # set too, not just (seed, step) — resume is exact
+            stream.load_state_dict(restored["stream"])
+        elif hasattr(stream, "seed"):
             stream.seed = int(restored["stream"]["seed"])
             stream.step = int(restored["stream"]["step"])
     else:
