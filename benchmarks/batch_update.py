@@ -46,13 +46,17 @@ def _oracle_phi(n_nodes: int, edges, stream):
 
 
 def _time_scan(workload, edges, stream):
+    import jax
     import jax.numpy as jnp
 
     ops = jnp.asarray(stream[:, 0], jnp.int32)
     aa = jnp.asarray(stream[:, 1], jnp.int32)
     bb = jnp.asarray(stream[:, 2], jnp.int32)
     g = DynamicGraph(workload.n_nodes, edges)
-    st = maintenance.apply_updates(g.spec, g.state, ops, aa, bb)
+    # apply_updates donates its input state: hand the warm-up call a copy so
+    # the timed call still has live buffers to consume
+    st = maintenance.apply_updates(
+        g.spec, jax.tree_util.tree_map(jnp.copy, g.state), ops, aa, bb)
     st.phi.block_until_ready()  # warm the jit cache
     t0 = time.perf_counter()
     st = maintenance.apply_updates(g.spec, g.state, ops, aa, bb)

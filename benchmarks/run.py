@@ -19,17 +19,17 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sweep (slow on CPU)")
     ap.add_argument("--only", default=None,
-                    help="comma list: truss,batch,service,affected,kernels,"
-                         "distributed,roofline")
+                    help="comma list: truss,batch,peel,service,affected,"
+                         "kernels,distributed,roofline")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (affected_set, batch_update, distributed_bench,
-                            kernels_bench, roofline, service_throughput,
-                            truss_maintenance)
+                            kernels_bench, peel_engine, roofline,
+                            service_throughput, truss_maintenance)
 
     selected = set((args.only or
-                    "truss,batch,service,affected,kernels,distributed,roofline")
-                   .split(","))
+                    "truss,batch,peel,service,affected,kernels,distributed,"
+                    "roofline").split(","))
     rows: list = []
     if "truss" in selected:
         print("== truss maintenance (paper Figs. 8-10) ==")
@@ -37,6 +37,9 @@ def main() -> None:
     if "batch" in selected:
         print("== fused batch-update sweep (ISSUE-1) ==")
         batch_update.main(rows, quick=not args.full)
+    if "peel" in selected:
+        print("== delta-peel engine A/B (ISSUE-3) ==")
+        peel_engine.main(rows, quick=not args.full)
     if "service" in selected:
         print("== truss service throughput (ISSUE-2) ==")
         service_throughput.main(rows, quick=not args.full)

@@ -2,8 +2,10 @@
 from .graph import (GraphSpec, GraphState, empty_state, from_edge_list,
                     lookup_edge, insert_edge_struct, delete_edge_struct,
                     apply_edge_batch_struct, triangle_partners, support,
-                    support_all, build_bitmap, support_all_bitmap)
+                    support_all, build_bitmap, support_all_bitmap,
+                    update_bitmap)
 from .decomposition import decompose, decompose_and_set
+from .peel import PeelStats, chunk_partners, delta_peel, peel, recompute_peel
 from .maintenance import (insert_edge_maintain, delete_edge_maintain,
                           apply_updates, OP_INSERT, OP_DELETE)
 from .batch import batch_maintain
@@ -17,6 +19,8 @@ __all__ = [
     "insert_edge_struct", "delete_edge_struct", "apply_edge_batch_struct",
     "triangle_partners", "support", "support_all", "decompose",
     "decompose_and_set", "build_bitmap", "support_all_bitmap",
+    "update_bitmap", "PeelStats", "chunk_partners", "delta_peel", "peel",
+    "recompute_peel",
     "insert_edge_maintain", "delete_edge_maintain", "apply_updates",
     "batch_maintain", "OP_INSERT", "OP_DELETE", "TrussIndex",
     "component_labels", "representatives", "representatives_from_labels",

@@ -29,15 +29,23 @@ Algorithms for Truss Decomposition"), in three fused stages:
    closure — re-decomposition of the affected component, the always-sound
    path.
 
-3. **Frozen-boundary re-peel** — one frontier-synchronous ``while_loop``
-   recomputes phi for the affected set A by mask peeling (decomposition.py
-   style), with every edge outside A "frozen": at level k it supports a
-   triangle iff ``phi_old >= k``.  Peeling removes a frozen edge exactly at
-   its true level, so for any A that contains every changed edge the result
-   equals the from-scratch decomposition (maximality argument: survivors of
-   level k restricted to A are exactly ``k-truss ∩ A``).  Inserted edges are
-   always members of A, so their phi falls out of the same peel — no
-   separate Algorithm-2 new-edge fixpoint is needed.
+3. **Frozen-boundary re-peel** — the shared peel engine (``peel.py``)
+   recomputes phi for the affected set A with every edge outside A
+   *frozen*: at level k a frozen edge supports a triangle iff ``phi_old >=
+   k`` and it retires from the qualifying subgraph when k passes its phi.
+   ``engine='auto'`` (default) picks the wave discipline per method —
+   incremental-bitmap delta waves for ``bitmap``, dense recompute waves
+   for ``sorted``; 'delta'/'recompute' force one for A/B runs.  Peeling
+   removes a frozen edge exactly at its true level, so for any A that
+   contains every changed edge the result equals the from-scratch
+   decomposition (maximality argument: survivors of level k restricted to A
+   are exactly ``k-truss ∩ A``).  Inserted edges are always members of A,
+   so their phi falls out of the same peel — no separate Algorithm-2
+   new-edge fixpoint is needed.
+
+``st`` is **donated**: the caller's pre-update GraphState buffers are reused
+for the output instead of reallocated per generation (service flush path) —
+do not read the passed-in state after the call.
 
 Exactness at every batch size is enforced against ``oracle.py`` by the
 tier-1 tests in ``tests/test_batch_maintenance.py``.
@@ -51,9 +59,9 @@ import jax
 import jax.numpy as jnp
 
 from .graph import (GraphSpec, GraphState, apply_edge_batch_struct,
-                    lookup_edge, support_all, support_all_bitmap,
-                    triangle_partners)
-from .maintenance import _NEG, _POS, _gather_phi, _scatter_or
+                    lookup_edge, triangle_partners)
+from .maintenance import _NEG, _POS
+from .peel import chunk_partners, gather_phi, peel as run_peel, scatter_or
 
 
 class _ExpandCarry(NamedTuple):
@@ -62,27 +70,26 @@ class _ExpandCarry(NamedTuple):
     it: jax.Array
 
 
-class _PeelCarry(NamedTuple):
-    alive: jax.Array      # bool[E_cap] — A-edges not yet assigned
-    phi: jax.Array        # int32[E_cap] — frozen outside A, filled inside
-    k: jax.Array
-    it: jax.Array
-
-
-@partial(jax.jit, static_argnames=("spec", "batch", "method"))
+@partial(jax.jit, static_argnames=("spec", "batch", "method", "engine"),
+         donate_argnames=("st",))
 def batch_maintain(spec: GraphSpec, st: GraphState,
                    del_a, del_b, del_valid,
                    ins_a, ins_b, ins_valid,
-                   batch: int = 256, method: str = "sorted"):
+                   batch: int = 256, method: str = "sorted",
+                   engine: str = "auto",
+                   bitmap: jax.Array | None = None):
     """Apply B deletions + B insertions jointly and maintain phi exactly.
 
     All arrays are length-B int32/bool (padded, masked).  Deletions and
     insertions must be disjoint, structurally valid edge sets (host-side
-    netting in ``DynamicGraph.apply_batch`` guarantees this).
+    netting in ``DynamicGraph.apply_batch`` guarantees this).  ``bitmap``,
+    when given (bitmap method), must be the adjacency bitmap of the
+    POST-update active set (``DynamicGraph`` maintains it incrementally).
 
-    Returns ``(state, lo, hi)`` — the post-update state plus the widened
+    Returns ``(state, lo, hi, stats)`` — the post-update state, the widened
     union affected range (int32 scalars; ``lo > hi`` means nothing beyond
-    the inserted edges themselves could change), for index invalidation.
+    the inserted edges themselves could change) for index invalidation, and
+    the re-peel ``PeelStats``.
     """
     e_cap, n = spec.e_cap, spec.n_nodes
     bsz = del_a.shape[0]
@@ -94,11 +101,11 @@ def batch_maintain(spec: GraphSpec, st: GraphState,
     dvc = jnp.where(del_valid, dv, 0)
     d_id1, d_id2, d_val = triangle_partners(spec, st, duc, dvc)     # [B, D]
     d_val = d_val & del_valid[:, None]
-    dp = jnp.minimum(_gather_phi(st.phi, d_id1, e_cap),
-                     _gather_phi(st.phi, d_id2, e_cap))
+    dp = jnp.minimum(gather_phi(st.phi, d_id1, e_cap),
+                     gather_phi(st.phi, d_id2, e_cap))
     d_kmin = jnp.min(jnp.where(d_val, dp, _POS), axis=1)
     d_slot, _ = jax.vmap(lambda a, b: lookup_edge(spec, st, a, b))(duc, dvc)
-    d_phi = _gather_phi(st.phi, d_slot, e_cap)
+    d_phi = gather_phi(st.phi, d_slot, e_cap)
     d_has = jnp.any(d_val, axis=1)
     d_lo = jnp.where(d_has, d_kmin, _POS)
     d_hi = jnp.where(d_has, d_phi, _NEG)
@@ -123,8 +130,8 @@ def batch_maintain(spec: GraphSpec, st: GraphState,
         return (ids < e_cap) & (slots_sorted[pos] == ids)
 
     new1, new2 = is_new(i_id1), is_new(i_id2)
-    q1 = _gather_phi(st1.phi, i_id1, e_cap)
-    q2 = _gather_phi(st1.phi, i_id2, e_cap)
+    q1 = gather_phi(st1.phi, i_id1, e_cap)
+    q2 = gather_phi(st1.phi, i_id2, e_cap)
     ex1 = i_val & ~new1
     ex2 = i_val & ~new2
     kmin_ex = jnp.minimum(jnp.min(jnp.where(ex1, q1, _POS), axis=1),
@@ -176,9 +183,9 @@ def batch_maintain(spec: GraphSpec, st: GraphState,
     seeds = jnp.zeros((e_cap,), bool)
     for ids, msk in ((d_id1, d_val), (d_id2, d_val),
                      (i_id1, i_val), (i_id2, i_val)):
-        seeds = _scatter_or(seeds, ids, admissible(ids, msk))
+        seeds = scatter_or(seeds, ids, admissible(ids, msk))
     seeds = seeds & st1.active
-    affected0 = _scatter_or(seeds, ins_slots, ins_valid)  # new edges always in A
+    affected0 = scatter_or(seeds, ins_slots, ins_valid)  # new edges always in A
 
     # ---- BFS closure over triangle adjacency -----------------------------
     def exp_cond(c: _ExpandCarry):
@@ -187,16 +194,12 @@ def batch_maintain(spec: GraphSpec, st: GraphState,
     def exp_body(c: _ExpandCarry):
         idx = jnp.nonzero(c.frontier, size=batch, fill_value=e_cap)[0]
         live = idx < e_cap
-        idxc = jnp.minimum(idx, e_cap - 1)
-        u = jnp.minimum(st1.edges[idxc, 0], n - 1)
-        v = jnp.minimum(st1.edges[idxc, 1], n - 1)
-        p1, p2, tval = triangle_partners(spec, st1, u, v)
-        tval = tval & live[:, None]
+        p1, p2, tval = chunk_partners(spec, st1, idx, st1.active)
         nxt = jnp.zeros((e_cap,), bool)
-        nxt = _scatter_or(nxt, p1, admissible(p1, tval))
-        nxt = _scatter_or(nxt, p2, admissible(p2, tval))
+        nxt = scatter_or(nxt, p1, admissible(p1, tval))
+        nxt = scatter_or(nxt, p2, admissible(p2, tval))
         nxt = nxt & ~c.affected
-        processed = _scatter_or(jnp.zeros((e_cap,), bool), idx, live)
+        processed = scatter_or(jnp.zeros((e_cap,), bool), idx, live)
         return _ExpandCarry(c.affected | nxt,
                             (c.frontier & ~processed) | nxt, c.it + 1)
 
@@ -205,41 +208,7 @@ def batch_maintain(spec: GraphSpec, st: GraphState,
         _ExpandCarry(affected0, affected0, jnp.int32(0)))
     affected = out.affected
 
-    # ---- frozen-boundary re-peel (single fused while_loop) ---------------
-    frozen = st1.active & ~affected
-    if method == "bitmap":
-        sup_fn = lambda qual: support_all_bitmap(spec, st1, qual)
-    else:
-        sup_fn = lambda qual: support_all(spec, st1, qual)
-
-    def peel_cond(c: _PeelCarry):
-        return jnp.any(c.alive) & (c.it < 8 * e_cap)
-
-    def peel_body(c: _PeelCarry):
-        # An edge counts toward level-k support iff it is an unpeeled member
-        # of A or a frozen edge whose (unchanged) phi keeps it in the k-truss.
-        # The full-graph pass every wave looks wasteful next to a
-        # frontier-compacted cascade, but XLA fuses the unconditional
-        # gather/searchsorted/reduce chain into one pass over [E, D] —
-        # measured 10-15x cheaper per wave than the same support behind a
-        # ``lax.cond``/compaction (which blocks the fusion).
-        qual = c.alive | (frozen & (st1.phi >= c.k))
-        sup = sup_fn(qual)
-        kill = c.alive & (sup < c.k - 2)
-        any_kill = jnp.any(kill)
-        phi = jnp.where(kill, c.k - 1, c.phi)
-        alive = c.alive & ~kill
-        # On a level fixpoint, jump k past dead levels: nothing can peel
-        # before an alive edge's support bound (min_sup + 3) or before the
-        # frozen boundary next shrinks (min frozen phi >= k exits at phi+1).
-        min_sup = jnp.min(jnp.where(alive, sup, _POS))
-        j2 = jnp.min(jnp.where(frozen & (st1.phi >= c.k), st1.phi, _POS)) + 1
-        k_jump = jnp.maximum(jnp.minimum(min_sup + 3, j2), c.k + 1)
-        k = jnp.where(any_kill, c.k, k_jump)
-        return _PeelCarry(alive, phi, k, c.it + 1)
-
-    peeled = jax.lax.while_loop(
-        peel_cond, peel_body,
-        _PeelCarry(affected, st1.phi, jnp.int32(3), jnp.int32(0)))
-    phi_final = jnp.where(st1.active, peeled.phi, 0)
-    return st1._replace(phi=phi_final), lo, hi
+    # ---- frozen-boundary re-peel (shared engine, peel.py) ----------------
+    phi_final, stats = run_peel(spec, st1, affected, bitmap=bitmap,
+                                method=method, engine=engine)
+    return st1._replace(phi=phi_final), lo, hi, stats

@@ -1,12 +1,16 @@
 """Batch truss decomposition — the paper's ``batchUpdate`` building block.
 
-TPU-native *mask peeling*: instead of a bucket queue over edges (inherently
-sequential), each ``lax.while_loop`` iteration recomputes the support of every
-alive edge as one fused batch (bitmap AND+popcount or sorted-row intersection)
-and strips the whole sub-threshold frontier at once.  When a level-k fixpoint
-is reached, k jumps directly to ``min alive support + 3`` (the next level at
-which anything can peel), so the iteration count is O(#peel waves), not
-O(k_max).
+A thin façade over the shared peel engine (``peel.py``): a full
+decomposition is a peel of the whole active set with an empty frozen
+boundary.  The engine owns both wave disciplines —
+
+* ``delta`` — incremental support maintenance: killed-frontier triangle
+  deltas (``sorted``) or incremental bitmap bit-clearing + the fused
+  ``peel_wave`` Pallas kernel (``bitmap``), O(E·D + Σ wave·D) total;
+* ``recompute`` — per-wave full support recomputation, O(waves·E·D), kept
+  as the A/B baseline for ``benchmarks/peel_engine.py``;
+
+and ``auto`` (default) picks the measured-faster discipline per method.
 
 ``phi`` semantics: an edge stripped at level k gets phi = k-1; an edge whose
 support is s at strip time therefore ends with phi = s+2 ≤ its initial bound
@@ -14,52 +18,29 @@ support is s at strip time therefore ends with phi = s+2 ≤ its initial bound
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
-import jax.numpy as jnp
 
-from .graph import GraphSpec, GraphState, support_all, support_all_bitmap
-
-_INF = jnp.int32(2**30)
+from .graph import GraphSpec, GraphState
+from .peel import peel as run_peel
 
 
-@partial(jax.jit, static_argnames=("spec", "method"))
-def decompose(spec: GraphSpec, st: GraphState, method: str = "sorted") -> jax.Array:
+def decompose(spec: GraphSpec, st: GraphState, method: str = "sorted",
+              engine: str = "auto", chunk: int = 64,
+              bitmap: jax.Array | None = None) -> jax.Array:
     """Return phi[E_cap] for the active subgraph of ``st``.
 
     method: 'sorted'  — searchsorted row intersection (sparse-friendly)
             'bitmap'  — adjacency-bitmap popcount (dense/small-N friendly,
                          the Pallas-kernel path on TPU)
+    engine: 'auto' | 'delta' | 'recompute' (see ``peel.peel``)
+    bitmap: optional cached adjacency bitmap of ``st.active`` (bitmap
+            method; skips the up-front O(E) build).
     """
-    if method == "bitmap":
-        sup_fn = lambda alive: support_all_bitmap(spec, st, alive)
-    else:
-        sup_fn = lambda alive: support_all(spec, st, alive)
-
-    def cond(carry):
-        alive, phi, k = carry
-        return jnp.any(alive)
-
-    def body(carry):
-        alive, phi, k = carry
-        sup = sup_fn(alive)
-        kill = alive & (sup < k - 2)
-        any_kill = jnp.any(kill)
-        phi = jnp.where(kill, k - 1, phi)
-        alive = alive & ~kill
-        # no kill at this level -> jump k to the next level that peels
-        min_sup = jnp.min(jnp.where(alive, sup, _INF))
-        k_next = jnp.maximum(k + 1, min_sup + 3)
-        k = jnp.where(any_kill, k, k_next)
-        return alive, phi, k
-
-    alive0 = st.active
-    phi0 = jnp.zeros((spec.e_cap,), jnp.int32)
-    k0 = jnp.int32(3)
-    _, phi, _ = jax.lax.while_loop(cond, body, (alive0, phi0, k0))
-    return jnp.where(st.active, phi, 0)
+    phi, _ = run_peel(spec, st, st.active, bitmap=bitmap,
+                      method=method, engine=engine, chunk=chunk)
+    return phi
 
 
-def decompose_and_set(spec: GraphSpec, st: GraphState, method: str = "sorted") -> GraphState:
-    return st._replace(phi=decompose(spec, st, method))
+def decompose_and_set(spec: GraphSpec, st: GraphState, method: str = "sorted",
+                      bitmap: jax.Array | None = None) -> GraphState:
+    return st._replace(phi=decompose(spec, st, method, bitmap=bitmap))

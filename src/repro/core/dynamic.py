@@ -3,7 +3,15 @@
 Owns capacity management (JAX arrays are fixed-shape; we re-allocate with
 doubled capacity when edge slots or per-node degree headroom run out),
 strategy selection (batchUpdate / progressiveUpdate / indexedUpdate, paper
-Table 3), and the update-range bookkeeping the index needs.
+Table 3), the update-range bookkeeping the index needs, and — for the
+bitmap support method — a structural adjacency-bitmap cache that is updated
+incrementally by every update path (``update_bitmap`` scatters, O(batch))
+instead of being rebuilt from zero on each decompose / re-peel call.
+
+The maintenance entry points (``insert/delete_edge_maintain``,
+``batch_maintain``, ``apply_updates``) donate their input GraphState, so a
+flush replaces ``self.state`` in-place at the buffer level — no
+per-generation copy.
 """
 from __future__ import annotations
 
@@ -11,7 +19,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from . import batch, decomposition, maintenance
-from .graph import GraphSpec, GraphState, from_edge_list, lookup_edge
+from .graph import (GraphSpec, GraphState, build_bitmap, from_edge_list,
+                    lookup_edge, update_bitmap)
 from .index import TrussIndex
 
 
@@ -29,7 +38,10 @@ class DynamicGraph:
             from .graph import empty_state
             self.state = empty_state(self.spec)
         self.support_method = support_method
-        self.state = decomposition.decompose_and_set(self.spec, self.state, support_method)
+        self._bitmap = None
+        self.last_peel_stats = None
+        self.state = decomposition.decompose_and_set(
+            self.spec, self.state, support_method, bitmap=self._bitmap_cache())
         self.index = TrussIndex(self.spec, tracked_ks)
         # Host mirror of the present-edge set, kept in sync by every update
         # path so batch netting never forces a device->host transfer.
@@ -45,11 +57,40 @@ class DynamicGraph:
         g.spec = spec
         g.state = GraphState(*(jnp.asarray(x) for x in state))
         g.support_method = support_method
+        g._bitmap = None
+        g.last_peel_stats = None
         g.index = TrussIndex(spec, tracked_ks)
         act = np.asarray(g.state.active)
         edges = np.asarray(g.state.edges)[act]
         g._present = {(int(min(u, v)), int(max(u, v))) for u, v in edges}
         return g
+
+    # -- bitmap cache --------------------------------------------------------
+    def _bitmap_cache(self):
+        """Adjacency bitmap of the active edge set (bitmap method only),
+        built once and maintained incrementally by every update path."""
+        if self.support_method != "bitmap":
+            return None
+        if self._bitmap is None:
+            self._bitmap = build_bitmap(self.spec, self.state, self.state.active)
+        return self._bitmap
+
+    def _bitmap_apply(self, dels, inss):
+        """Fold structural edge changes into the cached bitmap (O(batch)
+        scatter; no-op when the cache is cold or the method is sorted)."""
+        if self._bitmap is None:
+            return
+
+        def upd(bm, pairs, set_bits):
+            if not len(pairs):
+                return bm
+            arr = np.asarray(pairs, np.int32).reshape(-1, 2)
+            return update_bitmap(self.spec, bm, jnp.asarray(arr[:, 0]),
+                                 jnp.asarray(arr[:, 1]),
+                                 jnp.ones((len(arr),), bool),
+                                 set_bits=set_bits)
+
+        self._bitmap = upd(upd(self._bitmap, dels, False), inss, True)
 
     # -- capacity ------------------------------------------------------------
     def _ensure_capacity(self, a: int, b: int, inserting: bool):
@@ -86,6 +127,7 @@ class DynamicGraph:
         for i, (u, v) in enumerate(el):
             phi[i] = phi_old[(u, v)]
         self.state = self.state._replace(phi=jnp.asarray(phi))
+        self._bitmap = None  # shape depends only on n_nodes, but rebuild anyway
         self.index = TrussIndex(new_spec, self.index.tracked)
         self.index.invalidate_all()
 
@@ -95,20 +137,24 @@ class DynamicGraph:
         self._ensure_capacity(a, b, inserting=True)
         _lo, hi = self._range_of(a, b, inserting=True)
         self.state = maintenance.insert_edge_maintain(self.spec, self.state, a, b)
+        self.last_peel_stats = None  # Algorithm-2 path: no peel ran
         # Other edges' phi moves only inside the Theorem-2 range, but the
         # inserted edge itself joins (and can merge components of) every
         # level k <= phi(e) <= hi + 1 — invalidate from the bottom.
         self.index.invalidate(2, max(hi, 1))
         self._present.add((min(a, b), max(a, b)))
+        self._bitmap_apply((), [(min(a, b), max(a, b))])
 
     def delete(self, a: int, b: int):
         """progressiveUpdate deletion (Algorithm 1)."""
         _lo, hi = self._range_of(a, b, inserting=False)
         self.state = maintenance.delete_edge_maintain(self.spec, self.state, a, b)
+        self.last_peel_stats = None  # Algorithm-1 path: no peel ran
         # The deleted edge leaves (and can split components of) every level
         # k <= phi(e), not just the Theorem-1 phi range.
         self.index.invalidate(2, max(hi, 1))
         self._present.discard((min(a, b), max(a, b)))
+        self._bitmap_apply([(min(a, b), max(a, b))], ())
 
     def _range_of(self, a: int, b: int, inserting: bool):
         """Theorem 1/2 affected range for index invalidation."""
@@ -136,7 +182,7 @@ class DynamicGraph:
           per-update path; best for tiny batches where per-update affected
           sets are small and disjoint), or
         * ``fused`` — one ``batch.batch_maintain`` call: one vectorized
-          structural pass, one shared frontier, one peel loop.
+          structural pass, one shared frontier, one delta-peel.
 
         ``auto`` picks fused once the netted batch reaches
         ``fused_threshold`` updates (paper Table 3 framing: progressive
@@ -194,9 +240,23 @@ class DynamicGraph:
 
         da, db, dm = pad(dels)
         ia, ib, im = pad(inss)
-        self.state, _lo, hi = batch.batch_maintain(
-            self.spec, self.state, da, db, dm, ia, ib, im,
-            method=self.support_method)
+        # warm the cache from the PRE-update state, then fold the structural
+        # changes in: batch_maintain's delta-peel wants the POST-update
+        # adjacency bitmap
+        if self.support_method == "bitmap":
+            self._bitmap_cache()
+            self._bitmap_apply(dels, inss)
+        try:
+            self.state, _lo, hi, stats = batch.batch_maintain(
+                self.spec, self.state, da, db, dm, ia, ib, im,
+                method=self.support_method, bitmap=self._bitmap)
+        except BaseException:
+            # the cache already describes the post-update edge set but
+            # state/_present still the pre-update one — drop it rather than
+            # let later bitmap-method peels read a diverged cache
+            self._bitmap = None
+            raise
+        self.last_peel_stats = stats
         self._present = cur
         # Updated edges join/leave every level below the range too (they can
         # merge or split components there), so invalidate [2, hi + 1]; the
@@ -220,7 +280,10 @@ class DynamicGraph:
                                   max(self.spec.d_max, int(deg.max(initial=0)) + 4),
                                   max(self.spec.e_cap, len(el) + 16))
         self.state = from_edge_list(self.spec, np.asarray(el).reshape(-1, 2))
-        self.state = decomposition.decompose_and_set(self.spec, self.state, self.support_method)
+        self._bitmap = None  # wholesale structural rebuild: cache is stale
+        self.state = decomposition.decompose_and_set(
+            self.spec, self.state, self.support_method,
+            bitmap=self._bitmap_cache())
         self.index = TrussIndex(self.spec, self.index.tracked)
         self.index.invalidate_all()
 

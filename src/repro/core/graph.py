@@ -356,6 +356,33 @@ def build_bitmap(spec: GraphSpec, st: GraphState, alive: jax.Array) -> jax.Array
     return bm
 
 
+def update_bitmap(spec: GraphSpec, bm: jax.Array, u: jax.Array, v: jax.Array,
+                  valid: jax.Array, *, set_bits: bool) -> jax.Array:
+    """Incrementally set (insert) or clear (delete/peel) per-edge bits.
+
+    O(B) scatter instead of the O(E) rebuild of ``build_bitmap``.  Clearing
+    relies on the simple-graph invariant: every (edge, direction) owns one
+    distinct bit, and that bit is set iff the edge is present, so subtracting
+    the bit value clears it with no borrow (the dual of build_bitmap's
+    scatter-add-as-scatter-or).  Caller guarantees set bits are absent and
+    cleared bits are present.
+    """
+    uu = jnp.where(valid, u, spec.n_nodes).astype(jnp.int32)  # OOB rows drop
+    vv = jnp.where(valid, v, spec.n_nodes).astype(jnp.int32)
+    one = jnp.uint32(1)
+
+    def upd(bm, src, dst):
+        word = jnp.minimum(dst // 32, spec.n_words - 1).astype(jnp.int32)
+        bit = (dst % 32).astype(jnp.uint32)
+        val = jnp.left_shift(one, bit)
+        val = val if set_bits else jnp.uint32(0) - val
+        return bm.at[src, word].add(val, mode="drop")
+
+    bm = upd(bm, uu, vv)
+    bm = upd(bm, vv, uu)
+    return bm
+
+
 def support_all_bitmap(spec: GraphSpec, st: GraphState, alive: jax.Array,
                        bitmap: jax.Array | None = None) -> jax.Array:
     """Support of every edge via bitmap popcount (Pallas kernel hot loop)."""

@@ -35,17 +35,16 @@ import jax.numpy as jnp
 
 from .graph import (GraphSpec, GraphState, delete_edge_struct,
                     insert_edge_struct, lookup_edge, triangle_partners)
+from .peel import chunk_partners, gather_mask, gather_phi, scatter_or
 
 _NEG = jnp.int32(-(2**30))
 _POS = jnp.int32(2**30)
 
-
-# ---------------------------------------------------------------------------
-# shared helpers
-# ---------------------------------------------------------------------------
-
-def _gather_phi(phi: jax.Array, ids: jax.Array, e_cap: int) -> jax.Array:
-    return jnp.where(ids < e_cap, phi[jnp.minimum(ids, e_cap - 1)], 0)
+# The wave primitives (frontier-chunk triangle gather, masked scatters) are
+# shared with the delta-peel engine — peel.py owns the single implementation
+# used by Algorithms 1/2 here, the batch engine's closure, and the peel loop.
+_gather_phi = gather_phi
+_scatter_or = scatter_or
 
 
 def _edge_partner_stats(spec: GraphSpec, st: GraphState, a, b):
@@ -64,13 +63,6 @@ def _edge_partner_stats(spec: GraphSpec, st: GraphState, a, b):
     kmax = jnp.max(jnp.where(valid, pmax, _NEG))
     n_common = jnp.sum(valid).astype(jnp.int32)
     return id1, id2, valid, kmin, kmax, n_common
-
-
-def _scatter_or(mask: jax.Array, ids: jax.Array, cond: jax.Array) -> jax.Array:
-    """mask |= cond scattered at ids (sentinel/e_cap ids dropped)."""
-    e_cap = mask.shape[0]
-    ids = jnp.where(cond, ids, e_cap)
-    return mask.at[ids.reshape(-1)].set(True, mode="drop")
 
 
 def _phi_new_estimate(spec: GraphSpec, phi: jax.Array, id1, id2, valid) -> jax.Array:
@@ -95,9 +87,13 @@ class _DelCarry(NamedTuple):
     it: jax.Array
 
 
-@partial(jax.jit, static_argnames=("spec", "batch"))
+@partial(jax.jit, static_argnames=("spec", "batch"), donate_argnames=("st",))
 def delete_edge_maintain(spec: GraphSpec, st: GraphState, a, b, batch: int = 256) -> GraphState:
-    """Delete (a, b) and maintain phi for all remaining edges."""
+    """Delete (a, b) and maintain phi for all remaining edges.
+
+    ``st`` is donated (buffers reused for the output state) — do not read
+    the passed-in state after the call.
+    """
     a = jnp.asarray(a, jnp.int32)
     b = jnp.asarray(b, jnp.int32)
     slot, _ = lookup_edge(spec, st, jnp.minimum(a, b), jnp.maximum(a, b))
@@ -128,19 +124,15 @@ def delete_edge_maintain(spec: GraphSpec, st: GraphState, a, b, batch: int = 256
         idx = jnp.nonzero(c.frontier, size=batch, fill_value=spec.e_cap)[0]
         live = idx < spec.e_cap
         idxc = jnp.minimum(idx, spec.e_cap - 1)
-        u = jnp.minimum(st.edges[idxc, 0], spec.n_nodes - 1)
-        v = jnp.minimum(st.edges[idxc, 1], spec.n_nodes - 1)
         k = c.phi[idxc]
 
-        # localSupport(f, phi(f)) on current phi (Alg. 1 step 5)
-        p1, p2, tval = triangle_partners(spec, st, u, v)
+        # localSupport(f, phi(f)) on current phi (Alg. 1 step 5): the shared
+        # engine wave primitive gathers the frontier chunk's triangles with
+        # partner aliveness folded in (deleted slots never qualify).
+        p1, p2, tval = chunk_partners(spec, st, idx, st.active)
         q1 = _gather_phi(c.phi, p1, spec.e_cap) >= k[:, None]
         q2 = _gather_phi(c.phi, p2, spec.e_cap) >= k[:, None]
-        # partner edges must still be alive (deleted slot has phi==0 < lo>=2? guard via active)
-        al = jnp.concatenate([st.active, jnp.zeros((1,), bool)])
-        a1 = al[jnp.minimum(p1, spec.e_cap)]
-        a2 = al[jnp.minimum(p2, spec.e_cap)]
-        ls = jnp.sum(tval & q1 & q2 & a1 & a2, axis=1).astype(jnp.int32)
+        ls = jnp.sum(tval & q1 & q2, axis=1).astype(jnp.int32)
 
         dec = live & st.active[idxc] & ~c.marked[idxc] & (ls < k - 2) & (k >= lo) & (k <= hi)
         phi = c.phi.at[jnp.where(dec, idx, spec.e_cap)].add(-1, mode="drop")
@@ -176,9 +168,13 @@ class _InsCarry(NamedTuple):
     it: jax.Array
 
 
-@partial(jax.jit, static_argnames=("spec", "batch"))
+@partial(jax.jit, static_argnames=("spec", "batch"), donate_argnames=("st",))
 def insert_edge_maintain(spec: GraphSpec, st: GraphState, a, b, batch: int = 256) -> GraphState:
-    """Insert (a, b), maintain phi of existing edges, compute phi of (a, b)."""
+    """Insert (a, b), maintain phi of existing edges, compute phi of (a, b).
+
+    ``st`` is donated (buffers reused for the output state) — do not read
+    the passed-in state after the call.
+    """
     a = jnp.asarray(a, jnp.int32)
     b = jnp.asarray(b, jnp.int32)
     id1, id2, valid, kmin, kmax, n_common = _edge_partner_stats(spec, st, a, b)
@@ -201,8 +197,6 @@ def insert_edge_maintain(spec: GraphSpec, st: GraphState, a, b, batch: int = 256
                    jnp.int32(2))
     phi0 = st.phi.at[e_new].set(ub)
 
-    al = jnp.concatenate([st.active, jnp.zeros((1,), bool)])
-
     def mark_and_verify(phi):
         """One full mark-and-verify sweep at a fixed phi[e_new]; returns marks."""
         frontier0 = jnp.zeros((spec.e_cap,), bool)
@@ -217,21 +211,18 @@ def insert_edge_maintain(spec: GraphSpec, st: GraphState, a, b, batch: int = 256
             idx = jnp.nonzero(c.frontier, size=batch, fill_value=spec.e_cap)[0]
             live = idx < spec.e_cap
             idxc = jnp.minimum(idx, spec.e_cap - 1)
-            u = jnp.minimum(st.edges[idxc, 0], spec.n_nodes - 1)
-            v = jnp.minimum(st.edges[idxc, 1], spec.n_nodes - 1)
             k = c.phi[idxc]
 
-            p1, p2, tval = triangle_partners(spec, st, u, v)
+            # shared engine wave primitive: partner aliveness folds into tval
+            p1, p2, tval = chunk_partners(spec, st, idx, st.active)
 
             def qualifies(ids):
                 p = _gather_phi(c.phi, ids, spec.e_cap)
-                alive = al[jnp.minimum(ids, spec.e_cap)]
-                settled = jnp.concatenate([c.settled, jnp.zeros((1,), bool)])[
-                    jnp.minimum(ids, spec.e_cap)]
+                settled = gather_mask(c.settled, ids)
                 is_new = ids == e_new
                 firm = p >= (k[:, None] + 1)                       # already in the (k+1)-truss
                 maybe = (p == k[:, None]) & ~settled & ~is_new     # optimistically promotable
-                return alive & (firm | maybe)
+                return firm | maybe
 
             ls2 = jnp.sum(tval & qualifies(p1) & qualifies(p2), axis=1).astype(jnp.int32)
             ok = live & st.active[idxc] & (k >= lo) & (k <= hi) & ~c.settled[idxc]
@@ -289,12 +280,16 @@ OP_INSERT = 1
 OP_DELETE = 0
 
 
-@partial(jax.jit, static_argnames=("spec", "batch"))
+@partial(jax.jit, static_argnames=("spec", "batch"), donate_argnames=("st",))
 def apply_updates(spec: GraphSpec, st: GraphState, ops, aa, bb, batch: int = 256) -> GraphState:
     """Apply a stream of single-edge updates with incremental maintenance.
 
     ops/aa/bb: int32[U]. This is the paper's ``progressiveUpdate``: each
     update runs Algorithm 1 or 2; cost scales with the affected set, not |E|.
+
+    ``st`` is donated: the scan carry reuses the caller's GraphState buffers
+    instead of copying them per generation — do not read the passed-in
+    state after the call.
     """
     def step(st, upd):
         op, a, b = upd

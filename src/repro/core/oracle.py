@@ -17,6 +17,28 @@ def _canon(a: int, b: int):
     return (a, b) if a < b else (b, a)
 
 
+def scratch_phi(n_nodes: int, edges) -> dict[tuple[int, int], int]:
+    """From-scratch phi of an edge set — the shared exactness baseline used
+    by tests and benchmarks (one implementation, not one per caller)."""
+    adj: dict[int, set[int]] = {i: set() for i in range(n_nodes)}
+    for a, b in edges:
+        adj[a].add(b)
+        adj[b].add(a)
+    return truss_decomposition(adj)
+
+
+def phi_snapshot(state, phi=None) -> dict[tuple[int, int], int]:
+    """{(u, v): phi} for the active edges of a GraphState (optionally with
+    an override phi array) — the host-side view every exactness check
+    compares against ``scratch_phi``/``truss_decomposition`` output."""
+    import numpy as np  # local: keep this module importable without numpy
+
+    act = np.asarray(state.active)
+    edges = np.asarray(state.edges)[act]
+    phis = np.asarray(state.phi if phi is None else phi)[act]
+    return {(int(u), int(v)): int(p) for (u, v), p in zip(edges, phis)}
+
+
 def truss_decomposition(adj: dict[int, set[int]]) -> dict[tuple[int, int], int]:
     """phi(e) for every edge of the graph given as adjacency sets."""
     sup: dict[tuple[int, int], int] = {}

@@ -11,6 +11,7 @@ import jax
 
 from . import ref
 from .bitmap_support import bitmap_support_kernel
+from .peel_wave import peel_wave_kernel
 from .cin import cin_layer_kernel
 from .segment_matmul import segment_matmul_kernel
 from .flash_attention import flash_attention_kernel
@@ -31,6 +32,17 @@ def bitmap_support(rows_a, rows_b):
     if not _USE_KERNELS:
         return ref.bitmap_support_ref(rows_a, rows_b)
     return bitmap_support_kernel(rows_a, rows_b, interpret=_interpret())
+
+
+def peel_wave(rows_a, rows_b, alive, k):
+    # Unlike the other wrappers, this one only runs the Pallas body on real
+    # TPU hardware: it sits inside the peel engine's while_loop (one call
+    # per wave), where interpret-mode emulation costs ~40x over the fused
+    # XLA reference.  The kernel body itself is still validated in
+    # interpret mode by tests/test_peel_engine.py.
+    if _USE_KERNELS and jax.default_backend() == "tpu":
+        return peel_wave_kernel(rows_a, rows_b, alive, k)
+    return ref.peel_wave_ref(rows_a, rows_b, alive, k)
 
 
 def segment_matmul(messages, seg_ids, num_segments: int):

@@ -10,6 +10,14 @@ def bitmap_support_ref(rows_a: jax.Array, rows_b: jax.Array) -> jax.Array:
     return jnp.sum(inter.astype(jnp.int32), axis=1)
 
 
+def peel_wave_ref(rows_a: jax.Array, rows_b: jax.Array, alive: jax.Array,
+                  k: jax.Array):
+    """(support, kill-frontier) of the level-k peel wave; see peel_wave.py."""
+    sup = jnp.where(alive, bitmap_support_ref(rows_a, rows_b), 0)
+    kill = alive & (sup < jnp.asarray(k, jnp.int32) - 2)
+    return sup, kill
+
+
 def segment_matmul_ref(messages: jax.Array, seg_ids: jax.Array,
                        num_segments: int) -> jax.Array:
     return jax.ops.segment_sum(messages, seg_ids, num_segments=num_segments)

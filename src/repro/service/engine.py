@@ -8,7 +8,11 @@ single maintained truss oracle:
   generation they will commit in, and queued.  An admission policy flushes
   the queue as **one fused batch** (``DynamicGraph.apply_batch``, netted)
   every ``flush_every`` writes — the paper's batch-amortized streaming
-  ingestion (Jakkula & Karypis framing).
+  ingestion (Jakkula & Karypis framing).  The flush runs the delta-peel
+  engine (``core/peel.py``) with donated GraphState buffers, so a
+  generation commit re-peels only the affected set's triangles and reuses
+  the previous generation's arrays instead of copying them; ``stats()``
+  surfaces the last flush's ``PeelStats``.
 * **Reads** happen only at generation boundaries: every query first flushes
   pending writes, so a client always reads its own writes and never observes
   a half-applied batch (same discipline as the slot-admission fix in
@@ -248,7 +252,7 @@ class TrussService:
 
     # -- introspection --------------------------------------------------------
     def stats(self) -> dict:
-        return {
+        out = {
             "gen": self.gen,
             "n_edges": len(self.graph._present),
             "pending": len(self._pending),
@@ -256,3 +260,10 @@ class TrussService:
             "tracked_ks": tuple(self.graph.index.tracked),
             "max_truss": self.graph.max_truss(),
         }
+        # peel cost of the last fused flush (absent after progressive
+        # flushes, which run Algorithms 1/2 instead of a re-peel)
+        ps = self.graph.last_peel_stats
+        if ps is not None:
+            out["peel"] = {"waves": int(ps.waves), "kills": int(ps.kills),
+                           "deltas": int(ps.deltas)}
+        return out
