@@ -19,17 +19,17 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sweep (slow on CPU)")
     ap.add_argument("--only", default=None,
-                    help="comma list: truss,batch,peel,service,affected,"
-                         "kernels,distributed,roofline")
+                    help="comma list: truss,batch,peel,service,cluster,"
+                         "affected,kernels,distributed,roofline")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import (affected_set, batch_update, distributed_bench,
-                            kernels_bench, peel_engine, roofline,
-                            service_throughput, truss_maintenance)
+    from benchmarks import (affected_set, batch_update, cluster_scaling,
+                            distributed_bench, kernels_bench, peel_engine,
+                            roofline, service_throughput, truss_maintenance)
 
     selected = set((args.only or
-                    "truss,batch,peel,service,affected,kernels,distributed,"
-                    "roofline").split(","))
+                    "truss,batch,peel,service,cluster,affected,kernels,"
+                    "distributed,roofline").split(","))
     rows: list = []
     if "truss" in selected:
         print("== truss maintenance (paper Figs. 8-10) ==")
@@ -43,6 +43,9 @@ def main() -> None:
     if "service" in selected:
         print("== truss service throughput (ISSUE-2) ==")
         service_throughput.main(rows, quick=not args.full)
+    if "cluster" in selected:
+        print("== replicated cluster read scaling (ISSUE-4) ==")
+        cluster_scaling.main(rows, quick=not args.full)
     if "affected" in selected:
         print("== affected-set locality (Lemmas 6/8) ==")
         affected_set.main(rows)

@@ -1,0 +1,149 @@
+"""Read replica: snapshot bootstrap + committed-WAL tailing.
+
+Physical replication over the ``TrussStore`` directory: a replica opens the
+primary's store read-only, installs the latest snapshot (``load_snapshot``
++ ``DynamicGraph.from_state`` — phi is trusted as-is, no re-decomposition),
+then tails the shared WAL and applies netted generations through the same
+fused ``apply_batch`` / delta-peel path the primary runs.  Because
+
+* the snapshot arrays are the primary's arrays bit for bit,
+* ``commit.json`` guarantees the tail below the published frontier holds
+  only *complete* generation groups, and
+* ``apply_batch`` is a deterministic function of (state, netted batch),
+
+the replica's ``GraphState`` — phi included — is **bitwise-equal** to the
+primary's at every generation boundary it reaches (checked against both the
+primary and the pure-Python oracle in ``tests/test_cluster.py``).
+
+A replica holds no durable state of its own (its lease file is advisory),
+so crash recovery is simply: construct a fresh ``Replica`` and ``poll()``.
+When the primary compacts the WAL past the replica's applied frontier, the
+missing records are by construction covered by a newer snapshot — the
+replica reinstalls it and resumes tailing (snapshot-install path).
+
+``promote()`` is the failover path: reopen the store writable, replay the
+acked-but-uncommitted WAL tail past the applied frontier (acked writes must
+survive failover, exactly like ``TrussService.restore``), and hand back a
+serving primary.
+"""
+from __future__ import annotations
+
+from ..service.api import QueryRequest, QueryResponse
+from ..service.engine import TrussService
+from ..service.store import TrussStore
+
+
+class Replica:
+    """One read-only serving node tailing a primary's store directory."""
+
+    def __init__(self, root: str, replica_id: str = "replica-0", *,
+                 flush_every: int = 16, strategy: str = "auto",
+                 indexed: bool = True, support_method: str = "sorted"):
+        self.store = TrussStore(root, readonly=True)
+        self.replica_id = replica_id
+        # strategy/support_method must match the primary's for bitwise
+        # equality (they select the maintenance path apply_batch runs)
+        self._kw = dict(flush_every=flush_every, strategy=strategy,
+                        indexed=indexed, support_method=support_method)
+        self.svc: TrussService | None = None
+        self._install_snapshot()
+        self._publish()
+
+    # -- state ---------------------------------------------------------------
+    @property
+    def gen(self) -> int:
+        """Last generation boundary this replica has applied."""
+        return self.svc.gen
+
+    @property
+    def wal_applied(self) -> int:
+        """Global WAL index of the replica's applied frontier."""
+        return self.svc._applied_wal
+
+    def _install_snapshot(self):
+        tree = self.store.load_snapshot()
+        if tree is None:
+            raise ValueError(
+                f"no snapshot in {self.store.root} — primary not initialized")
+        # store=None: the inner service must never append/fsync/snapshot
+        self.svc = TrussService._from_snapshot_tree(tree, store=None,
+                                                    **self._kw)
+
+    def _publish(self):
+        """Refresh the lease file, skipping the write when the applied
+        frontier has not moved (polls on a quiet WAL stay read-only)."""
+        frontier = (self.gen, self.wal_applied)
+        if getattr(self, "_published", None) == frontier:
+            return
+        self.store.publish_replica(self.replica_id, {
+            "gen": self.gen, "wal_applied": self.wal_applied})
+        self._published = frontier
+
+    # -- replication ---------------------------------------------------------
+    def poll(self, max_gens: int | None = None) -> int:
+        """Apply WAL records up to the primary's committed frontier, one
+        ``apply_batch`` per generation group (the identical batch boundaries
+        the primary flushed at).  O(new records) per call thanks to the
+        store's tail cache.  ``max_gens`` caps how many generation groups
+        are applied this call (used by the crash tests to park the replica
+        mid-tail); the applied frontier only ever advances at group
+        boundaries, so a partial poll is always resumable.  Returns the
+        applied generation."""
+        commit = self.store.read_commit()
+        if commit is None or (max_gens is not None and max_gens <= 0):
+            self._publish()          # primary has not committed anything yet
+            return self.gen
+        high = int(commit["wal_len"])
+        if high > self.wal_applied:
+            # stop at the committed frontier: complete groups only, and the
+            # store's tail cache parks there so the next poll is O(new)
+            tail = self.store.read_wal(start=self.wal_applied, stop=high)
+            if self.store.base > self.wal_applied:
+                # the primary compacted past us: records [applied, base) are
+                # gone but covered by a newer snapshot — reinstall, re-tail
+                self._install_snapshot()
+                tail = self.store.read_wal(start=self.wal_applied, stop=high)
+            self.svc._replay(tail, max_groups=max_gens)
+        self._publish()
+        return self.gen
+
+    # -- serving -------------------------------------------------------------
+    def handle(self, req: QueryRequest) -> QueryResponse:
+        """Answer a query at this replica's applied generation.  The inner
+        service has no pending writes, so its flush-first discipline
+        no-ops and the response generation is the replica's applied gen."""
+        return self.svc.handle(req)
+
+    def stats(self) -> dict:
+        out = self.svc.stats()
+        out["replica_id"] = self.replica_id
+        out["wal_applied"] = self.wal_applied
+        commit = self.store.read_commit()
+        if commit is not None:
+            out["lag_gens"] = int(commit["gen"]) - self.gen
+            out["lag_records"] = int(commit["wal_len"]) - self.wal_applied
+        return out
+
+    # -- failover ------------------------------------------------------------
+    def promote(self) -> TrussService:
+        """Turn this replica into the primary: reopen the store writable
+        (torn-tail truncation + append handle), replay *everything* past the
+        applied frontier — committed or not, acked writes survive failover —
+        and publish the new committed frontier.  The replica object is
+        decommissioned (``svc`` handed over); callers keep the returned
+        ``TrussService``."""
+        self.store.close()
+        store = TrussStore(self.store.root)
+        if store.base > self.wal_applied:
+            # never polled past a compaction: bootstrap from the snapshot
+            # that covers the compacted prefix before replaying the tail
+            tree = store.load_snapshot()
+            self.svc = TrussService._from_snapshot_tree(tree, store=None,
+                                                        **self._kw)
+        svc = self.svc
+        svc._replay(store.read_wal(start=self.wal_applied))
+        svc.store = store
+        store.publish_commit(svc.gen, svc._applied_wal)
+        store.remove_replica(self.replica_id)  # no longer a tailer
+        self.svc = None
+        return svc

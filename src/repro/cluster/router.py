@@ -1,0 +1,172 @@
+"""Consistency-aware query router over a primary + N read replicas.
+
+Writes always go to the primary (single-writer discipline — the WAL has one
+appender).  Reads fan out by the policy carried on each ``QueryRequest``:
+
+* ``STRONG`` — primary only.  The primary flushes pending writes before
+  answering, so the response is the freshest committed state.
+* ``BOUNDED`` (``bound=g``) — any replica whose applied generation is
+  within ``g`` generations of the primary's *committed* generation.
+  Bounded reads never force a primary flush, so they are the policy that
+  scales: they neither interfere with write batching nor queue behind it.
+* ``READ_YOUR_WRITES`` — sessions carry a generation token: every
+  ``WriteAck`` advances it (``ack.gen`` is the generation the write commits
+  in), and reads only go to nodes whose applied gen has reached the token.
+  The primary always qualifies (its flush-first query path commits the
+  session's pending writes), so RYW can never serve a stale generation.
+
+Replication here is pull-based: replicas advance when ``poll()`` runs.  The
+router polls lazily — only when no replica satisfies a read's freshness
+floor (``poll_on_miss``) — and callers drive steady-state catch-up with
+``poll_replicas()`` at whatever heartbeat suits the deployment.
+"""
+from __future__ import annotations
+
+from ..service.api import (BOUNDED, COMMUNITY, MAX_K, MEMBERS,
+                           READ_YOUR_WRITES, REPRESENTATIVES, STRONG,
+                           QueryRequest, QueryResponse, WriteAck)
+from ..service.engine import TrussService
+from .replica import Replica
+
+
+def query_from_record(rec, consistency: str = STRONG,
+                      bound: int = 0) -> QueryRequest:
+    """Build a ``QueryRequest`` from a ``MixedWorkloadStream`` read record
+    ``("r", kind, k, a, b)`` under the given routing policy."""
+    _, kind, k, a, b = rec
+    if kind == COMMUNITY:
+        return QueryRequest(COMMUNITY, k=int(k), node=int(a),
+                            consistency=consistency, bound=bound)
+    if kind == MAX_K:
+        return QueryRequest(MAX_K, edge=(int(a), int(b)),
+                            consistency=consistency, bound=bound)
+    if kind == MEMBERS:
+        return QueryRequest(MEMBERS, k=int(k), consistency=consistency,
+                            bound=bound)
+    if kind == REPRESENTATIVES:
+        return QueryRequest(REPRESENTATIVES, k=int(k),
+                            consistency=consistency, bound=bound)
+    raise ValueError(f"unknown read kind {kind!r}")
+
+
+class Session:
+    """Client handle carrying the read-your-writes generation token."""
+
+    def __init__(self, router: "QueryRouter"):
+        self.router = router
+        self.token = 0  # highest generation any of this session's writes commits in
+
+    def submit(self, op: int, a: int, b: int) -> WriteAck:
+        ack = self.router.submit(op, a, b)
+        self.token = max(self.token, ack.gen)
+        return ack
+
+    def submit_many(self, updates) -> list[WriteAck]:
+        acks = self.router.submit_many(updates)
+        if acks:
+            self.token = max(self.token, acks[-1].gen)
+        return acks
+
+    def query(self, req: QueryRequest) -> QueryResponse:
+        return self.router.route(req, token=self.token)
+
+
+class QueryRouter:
+    def __init__(self, primary: TrussService, replicas=(), *,
+                 poll_on_miss: bool = True):
+        self.primary = primary
+        self.replicas: list[Replica] = list(replicas)
+        self.poll_on_miss = poll_on_miss
+        self._rr = 0           # round-robin cursor over qualifying replicas
+        self.served: dict[str, int] = {}
+
+    # -- writes (single-writer: always the primary) ---------------------------
+    def submit(self, op: int, a: int, b: int) -> WriteAck:
+        return self.primary.submit(op, a, b)
+
+    def submit_many(self, updates) -> list[WriteAck]:
+        return self.primary.submit_many(updates)
+
+    def session(self) -> Session:
+        return Session(self)
+
+    # -- replication heartbeat ------------------------------------------------
+    def poll_replicas(self):
+        """Advance every replica to the primary's committed frontier."""
+        for r in self.replicas:
+            r.poll()
+
+    # -- reads ----------------------------------------------------------------
+    def _pick(self, min_gen: int) -> Replica | None:
+        """Round-robin over replicas at/past ``min_gen``; on a miss, poll
+        once (the frontier may simply not have been pulled yet) and retry.
+        None means no replica qualifies — the caller falls back to the
+        primary."""
+        cand = [r for r in self.replicas if r.gen >= min_gen]
+        if not cand and self.replicas and self.poll_on_miss:
+            self.poll_replicas()
+            cand = [r for r in self.replicas if r.gen >= min_gen]
+        if not cand:
+            return None
+        self._rr += 1
+        return cand[self._rr % len(cand)]
+
+    def route(self, req: QueryRequest, token: int = 0) -> QueryResponse:
+        """Dispatch one read under its consistency policy; the response is
+        stamped with the node that served it."""
+        if req.consistency == STRONG:
+            node, name = self.primary, "primary"
+        else:
+            if req.consistency == BOUNDED:
+                min_gen = self.primary.gen - int(req.bound)
+            elif req.consistency == READ_YOUR_WRITES:
+                min_gen = int(token)
+            else:
+                raise ValueError(f"unknown consistency {req.consistency!r}")
+            if min_gen > self.primary.gen:
+                # the token is ahead of the committed frontier (the session
+                # has acked-but-unflushed writes): no committed-WAL tailer
+                # can qualify, so don't even poll — only the primary's
+                # flush-first read path can satisfy this read
+                picked = None
+            else:
+                picked = self._pick(min_gen)
+            if picked is not None:
+                node, name = picked, picked.replica_id
+            elif req.consistency == BOUNDED:
+                # primary fallback at lag 0 from the committed generation —
+                # bounded semantics never require (or pay for) a flush
+                resp = self.primary.handle_committed(req)
+                resp.served_by = "primary"
+                self.served["primary"] = self.served.get("primary", 0) + 1
+                return resp
+            else:
+                node, name = self.primary, "primary"
+        resp = node.handle(req)
+        resp.served_by = name
+        self.served[name] = self.served.get(name, 0) + 1
+        return resp
+
+    # -- failover -------------------------------------------------------------
+    def promote(self, replica: Replica | None = None) -> TrussService:
+        """Fail over to a replica (default: the most caught-up one): it
+        replays the WAL tail, reopens the store for writes, and becomes this
+        router's primary."""
+        if replica is None:
+            if not self.replicas:
+                raise ValueError("no replicas to promote")
+            replica = max(self.replicas, key=lambda r: r.wal_applied)
+        self.replicas.remove(replica)
+        self.primary = replica.promote()
+        return self.primary
+
+    # -- introspection --------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "primary_gen": self.primary.gen,
+            "replicas": {r.replica_id:
+                         {"gen": r.gen,
+                          "lag_gens": self.primary.gen - r.gen}
+                         for r in self.replicas},
+            "served": dict(self.served),
+        }

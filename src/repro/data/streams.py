@@ -1,11 +1,22 @@
 """Update-stream generation (paper §6.1): random insert/delete mixes over a
-base graph, stored for reuse so every approach sees the identical stream."""
+base graph, stored for reuse so every approach sees the identical stream —
+plus the mixed read/write serving workload that drives the cluster bench."""
 from __future__ import annotations
 
 import numpy as np
 
 OP_DELETE = 0
 OP_INSERT = 1
+
+# MixedWorkloadStream record tags / read kinds (the kind strings match
+# repro.service.api's query-kind constants so records convert 1:1 into
+# QueryRequests without this data layer importing the service layer)
+READ = "r"
+WRITE = "w"
+KIND_COMMUNITY = "community"
+KIND_MAX_K = "max_k"
+KIND_MEMBERS = "members"
+KIND_REPRESENTATIVES = "representatives"
 
 
 def make_update_stream(edges: np.ndarray, n_nodes: int, n_updates: int,
@@ -32,6 +43,36 @@ def make_update_stream(edges: np.ndarray, n_nodes: int, n_updates: int,
             present.discard(e)
             out.append((OP_DELETE, e[0], e[1]))
     return np.asarray(out, np.int64)
+
+
+def _sample_insert(rng, present: set, n_nodes: int) -> tuple[int, int]:
+    """Rejection-sample an absent, non-loop edge and add it to ``present``."""
+    while True:
+        a, b = rng.integers(0, n_nodes, size=2)
+        a, b = int(min(a, b)), int(max(a, b))
+        if a != b and (a, b) not in present:
+            present.add((a, b))
+            return a, b
+
+
+def _sample_delete(rng, present: set) -> tuple[int, int]:
+    """Pick a present edge (sorted order for determinism) and remove it."""
+    e = sorted(present)[rng.integers(len(present))]
+    present.discard(e)
+    return e
+
+
+def _present_state(seed: int, step: int, present: set) -> dict:
+    """Resumable stream state: the rng is keyed by (seed, step) per chunk,
+    and the evolving present-edge set is captured explicitly so restore
+    needs no replay."""
+    arr = np.asarray(sorted(present), np.int64).reshape(-1, 2)
+    return {"seed": seed, "step": step, "present": arr}
+
+
+def _load_present(state) -> set:
+    return {(int(u), int(v))
+            for u, v in np.asarray(state["present"]).reshape(-1, 2)}
 
 
 def iter_batches(stream: np.ndarray, batch_size: int):
@@ -64,25 +105,15 @@ class GraphUpdateStream:
         out = []
         for _ in range(self.chunk):
             if rng.random() < self.insert_frac or not self._present:
-                while True:
-                    a, b = rng.integers(0, self.n, size=2)
-                    a, b = int(min(a, b)), int(max(a, b))
-                    if a != b and (a, b) not in self._present:
-                        break
-                self._present.add((a, b))
+                a, b = _sample_insert(rng, self._present, self.n)
                 out.append((OP_INSERT, a, b))
             else:
-                e = sorted(self._present)[rng.integers(len(self._present))]
-                self._present.discard(e)
-                out.append((OP_DELETE, e[0], e[1]))
+                a, b = _sample_delete(rng, self._present)
+                out.append((OP_DELETE, a, b))
         return np.asarray(out, np.int64)
 
     def state_dict(self):
-        """Everything needed to resume the stream exactly: the rng is keyed
-        by (seed, step) per chunk, and the evolving present-edge set is
-        captured explicitly so restore needs no replay."""
-        present = np.asarray(sorted(self._present), np.int64).reshape(-1, 2)
-        return {"seed": self.seed, "step": self.step, "present": present}
+        return _present_state(self.seed, self.step, self._present)
 
     def load_state_dict(self, state):
         """Restore so the next ``next()`` yields the chunk the saved stream
@@ -92,11 +123,91 @@ class GraphUpdateStream:
         seed, step = int(state["seed"]), int(state["step"])
         if "present" in state:
             self.seed, self.step = seed, step
-            self._present = {(int(u), int(v))
-                             for u, v in np.asarray(state["present"]).reshape(-1, 2)}
+            self._present = _load_present(state)
             return self
         self.seed, self.step = seed, 0
         self._present = {(int(u), int(v)) for u, v in self.edges}
         while self.step < step:
             self.next()
+        return self
+
+
+class MixedWorkloadStream:
+    """Mixed read/write serving workload with zipfian query keys.
+
+    Models the traffic a replicated community-search service sees: mostly
+    point reads whose seed nodes follow a zipf(``zipf_s``) rank distribution
+    over node ids (hot communities absorb most queries — exactly the
+    locality a read-replica tier exploits), interleaved with valid
+    insert/delete writes maintained the same way ``GraphUpdateStream``
+    maintains its evolving present-edge set.  Each ``next()`` yields one
+    chunk of records::
+
+        (WRITE, op, a, b)      op in {OP_INSERT, OP_DELETE}
+        (READ, kind, k, a, b)  kind in {community, max_k, members,
+                               representatives}; a/b are zipf node keys
+                               (a = community seed; (a, b) = max_k edge;
+                               -1 when the kind takes no key)
+
+    The read mix is point-lookup heavy (~60% community, ~30% max_k) with an
+    occasional full-enumeration read (representatives/members).  The rng is
+    keyed by ``(seed, step)`` per chunk, so two instances with the same
+    parameters produce the identical workload — every cluster configuration
+    in the bench replays the same traffic."""
+
+    def __init__(self, edges: np.ndarray, n_nodes: int, chunk: int = 32,
+                 read_frac: float = 0.9, zipf_s: float = 1.1,
+                 ks: tuple[int, ...] = (3, 4), insert_frac: float = 0.5,
+                 seed: int = 0, step: int = 0):
+        self.n = n_nodes
+        self.chunk = chunk
+        self.read_frac = read_frac
+        self.zipf_s = zipf_s
+        self.ks = tuple(int(k) for k in ks)
+        self.insert_frac = insert_frac
+        self.seed = seed
+        self.step = step
+        ranks = np.arange(1, n_nodes + 1, dtype=np.float64)
+        p = ranks ** -float(zipf_s)
+        self._p = p / p.sum()   # node id == popularity rank
+        self._present = {(int(u), int(v)) for u, v in edges}
+
+    def _zipf_node(self, rng) -> int:
+        return int(rng.choice(self.n, p=self._p))
+
+    def next(self) -> list[tuple]:
+        rng = np.random.default_rng((self.seed, self.step))
+        self.step += 1
+        out: list[tuple] = []
+        for _ in range(self.chunk):
+            if rng.random() < self.read_frac:
+                k = self.ks[rng.integers(len(self.ks))]
+                r = rng.random()
+                if r < 0.6:
+                    out.append((READ, KIND_COMMUNITY, k,
+                                self._zipf_node(rng), -1))
+                elif r < 0.9:
+                    a = self._zipf_node(rng)
+                    b = self._zipf_node(rng)
+                    while b == a:
+                        b = self._zipf_node(rng)
+                    out.append((READ, KIND_MAX_K, k, a, b))
+                elif r < 0.97:
+                    out.append((READ, KIND_REPRESENTATIVES, k, -1, -1))
+                else:
+                    out.append((READ, KIND_MEMBERS, k, -1, -1))
+            elif rng.random() < self.insert_frac or not self._present:
+                a, b = _sample_insert(rng, self._present, self.n)
+                out.append((WRITE, OP_INSERT, a, b))
+            else:
+                a, b = _sample_delete(rng, self._present)
+                out.append((WRITE, OP_DELETE, a, b))
+        return out
+
+    def state_dict(self):
+        return _present_state(self.seed, self.step, self._present)
+
+    def load_state_dict(self, state):
+        self.seed, self.step = int(state["seed"]), int(state["step"])
+        self._present = _load_present(state)
         return self

@@ -15,18 +15,32 @@ replays the WAL tail, then fast-forwards the deterministic stream past
 whatever the replay already applied, finishing a torn mid-tick batch from
 its WAL offset).  The stream-generation flags (``--seed``, ``--degree``,
 ``--chunk``) must match the original run — they define the stream identity.
+
+Cluster modes (``repro.cluster``):
+
+    # tail an existing store as a read replica (run the primary elsewhere)
+    PYTHONPATH=src python -m repro.launch.serve_truss \
+        --replica-of /tmp/truss --ticks 8
+
+    # primary + N in-process replicas behind the consistency-aware router,
+    # driven by the mixed zipfian read/write workload
+    PYTHONPATH=src python -m repro.launch.serve_truss --store /tmp/truss \
+        --router --replicas 2 --consistency bounded --bound 2
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
 
-from ..data.streams import GraphUpdateStream
+from ..cluster import QueryRouter, Replica, query_from_record
+from ..data.streams import READ, GraphUpdateStream, MixedWorkloadStream
 from ..data.synthetic import powerlaw_graph
-from ..service import (COMMUNITY, MAX_K, MEMBERS, REPRESENTATIVES,
-                       QueryRequest, TrussService, TrussStore)
+from ..service import (COMMUNITY, CONSISTENCY_LEVELS, MAX_K, MEMBERS,
+                       REPRESENTATIVES, QueryRequest, TrussService,
+                       TrussStore)
 
 
 def _query_mix(svc: TrussService, ks, rng) -> list[QueryRequest]:
@@ -39,6 +53,97 @@ def _query_mix(svc: TrussService, ks, rng) -> list[QueryRequest]:
         reqs += [QueryRequest(MAX_K, edge=(int(e[0]), int(e[1]))),
                  QueryRequest(COMMUNITY, k=int(ks[0]), node=int(e[0]))]
     return reqs
+
+
+def _run_replica(args, ks, rng):
+    """Tail a store as a read replica: poll, answer the query mix, report
+    lag; the primary (or a static store) lives elsewhere."""
+    rep = Replica(args.replica_of, replica_id=f"replica-{os.getpid()}",
+                  indexed=not args.no_index)
+    for tick in range(args.ticks):
+        gen = rep.poll()
+        answered = []
+        for req in _query_mix(rep.svc, ks, rng):
+            resp = rep.handle(req)
+            answered.append((req.kind, resp.value if resp.value is not None
+                             else resp.n_edges))
+        s = rep.stats()
+        print(f"tick {tick}: applied gen {gen} "
+              f"(lag {s.get('lag_gens', '?')} gens / "
+              f"{s.get('lag_records', '?')} records); " +
+              " ".join(f"{k}={v}" for k, v in answered))
+        time.sleep(args.poll_interval)
+    print(f"final: {rep.stats()}")
+    return rep
+
+
+def _run_router(args, ks, rng):
+    """Primary + N in-process replicas behind the consistency-aware router,
+    driven by the mixed zipfian read/write workload."""
+    if not args.store:
+        raise SystemExit("--router requires --store")
+    if args.restore:
+        primary = TrussService.restore(TrussStore(args.store),
+                                       flush_every=args.flush_every,
+                                       indexed=not args.no_index)
+        # the node universe comes from the restored spec, not the CLI args
+        # (same discipline as the single-node restore path)
+        n_nodes = primary.graph.spec.n_nodes
+        edges = powerlaw_graph(n_nodes, args.degree, seed=args.seed)
+    else:
+        n_nodes = args.nodes
+        edges = powerlaw_graph(n_nodes, args.degree, seed=args.seed)
+        primary = TrussService(n_nodes, edges, tracked_ks=ks,
+                               flush_every=args.flush_every,
+                               store=TrussStore(args.store),
+                               indexed=not args.no_index)
+    replicas = [Replica(args.store, f"replica-{i}",
+                        indexed=not args.no_index)
+                for i in range(args.replicas)]
+    router = QueryRouter(primary, replicas)
+    wl = MixedWorkloadStream(edges, n_nodes, chunk=args.chunk,
+                             read_frac=args.read_frac, ks=ks,
+                             seed=args.seed + 1)
+    # Resume the workload where the snapshot left it.  A crash may have
+    # acked writes past the snapshot (the replayed WAL tail); the snapshot
+    # compacts the log, so base..wal_len counts exactly those writes — the
+    # deterministic stream regenerates them, and we skip them (their reads
+    # re-run harmlessly) instead of re-submitting already-present edges.
+    skip_writes = 0
+    if args.restore:
+        if primary.stream_state is not None:
+            wl.load_state_dict(primary.stream_state)
+        skip_writes = primary.store.wal_len - primary.store.base
+        print(f"restored: {primary.stats()} "
+              f"(skipping {skip_writes} replayed writes)")
+    sess = router.session()
+    lat: list[float] = []
+    for tick in range(args.ticks):
+        n_w = n_r = 0
+        for rec in wl.next():
+            if rec[0] != READ and skip_writes > 0:
+                skip_writes -= 1
+                continue
+            if rec[0] == READ:
+                req = query_from_record(rec, consistency=args.consistency,
+                                        bound=args.bound)
+                t0 = time.perf_counter()
+                sess.query(req)
+                lat.append(time.perf_counter() - t0)
+                n_r += 1
+            else:
+                sess.submit(rec[1], rec[2], rec[3])
+                n_w += 1
+        router.poll_replicas()  # replication heartbeat, once per tick
+        print(f"tick {tick}: +{n_w} writes, {n_r} reads -> {router.stats()}")
+    if lat:
+        ms = np.asarray(sorted(lat)) * 1e3
+        print(f"\n{len(lat)} {args.consistency} reads: "
+              f"p50={np.percentile(ms, 50):.2f}ms "
+              f"p99={np.percentile(ms, 99):.2f}ms")
+    primary.snapshot(stream_state=wl.state_dict())
+    print(f"final: {primary.stats()}")
+    return router
 
 
 def main(argv=None):
@@ -57,10 +162,31 @@ def main(argv=None):
     ap.add_argument("--no-index", action="store_true",
                     help="recompute-per-query baseline mode")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replica-of", default=None, metavar="STORE",
+                    help="tail STORE as a read replica instead of serving writes")
+    ap.add_argument("--poll-interval", type=float, default=0.2,
+                    help="replica mode: seconds between WAL polls")
+    ap.add_argument("--router", action="store_true",
+                    help="primary + --replicas read replicas behind the "
+                         "consistency-aware query router")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="router mode: number of read replicas")
+    ap.add_argument("--read-frac", type=float, default=0.9,
+                    help="router mode: read fraction of the mixed workload")
+    ap.add_argument("--consistency", default="bounded",
+                    choices=CONSISTENCY_LEVELS,
+                    help="router mode: read consistency policy")
+    ap.add_argument("--bound", type=int, default=2,
+                    help="router mode: staleness bound in generations")
     args = ap.parse_args(argv)
 
     ks = tuple(int(k) for k in args.ks.split(","))
     rng = np.random.default_rng(args.seed)
+
+    if args.replica_of:
+        return _run_replica(args, ks, rng)
+    if args.router:
+        return _run_router(args, ks, rng)
 
     if args.restore:
         if not args.store:

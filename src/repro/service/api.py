@@ -20,6 +20,14 @@ REPRESENTATIVES = "representatives"  # one edge per k-truss component
 
 QUERY_KINDS = (MEMBERS, COMMUNITY, MAX_K, REPRESENTATIVES)
 
+# consistency policies (honored by the cluster QueryRouter; a single-node
+# service always serves STRONG semantics — every query flushes first)
+STRONG = "strong"                    # primary only: freshest committed state
+BOUNDED = "bounded"                  # any node within `bound` generations
+READ_YOUR_WRITES = "read_your_writes"  # nodes at/past the session's gen token
+
+CONSISTENCY_LEVELS = (STRONG, BOUNDED, READ_YOUR_WRITES)
+
 
 @dataclasses.dataclass(frozen=True)
 class WriteRequest:
@@ -44,6 +52,8 @@ class QueryRequest:
     k: int = 3
     node: int | None = None                  # COMMUNITY seed (node form)
     edge: tuple[int, int] | None = None      # COMMUNITY seed / MAX_K target
+    consistency: str = STRONG                # routing policy (cluster only)
+    bound: int = 0                           # max staleness gens (BOUNDED)
 
     def __post_init__(self):
         if self.kind not in QUERY_KINDS:
@@ -52,6 +62,10 @@ class QueryRequest:
             raise ValueError("community query needs a node or an edge")
         if self.kind == MAX_K and self.edge is None:
             raise ValueError("max_k query needs an edge")
+        if self.consistency not in CONSISTENCY_LEVELS:
+            raise ValueError(f"unknown consistency {self.consistency!r}")
+        if self.bound < 0:
+            raise ValueError("bound must be >= 0")
 
 
 @dataclasses.dataclass
@@ -60,6 +74,7 @@ class QueryResponse:
     gen: int                         # generation the answer is consistent at
     edges: np.ndarray | None = None  # [m, 2] for edge-set answers
     value: int | None = None         # MAX_K answer
+    served_by: str | None = None     # stamped by the QueryRouter
 
     @property
     def n_edges(self) -> int:

@@ -26,6 +26,12 @@ single maintained truss oracle:
 ``indexed=False`` turns the service into the recompute-per-query baseline
 (progressiveUpdate's query path) — used by ``benchmarks/service_throughput``
 to measure what the index buys.
+
+The same machinery feeds the replicated serving tier (``repro.cluster``):
+every flush publishes the committed frontier to the store (``commit.json``)
+so read replicas can tail complete generation groups, every ``WriteAck``
+doubles as a read-your-writes generation token, and ``stats()`` reports
+per-replica lag from the lease files tailers publish.
 """
 from __future__ import annotations
 
@@ -65,25 +71,35 @@ class TrussService:
         self.indexed = indexed
         self.gen = 0                 # committed generation
         self._pending: list = []     # acked, not yet applied
+        self._applied_wal = 0        # global WAL index of the committed frontier
         self._view = set(self.graph._present)  # present + pending effects
         self.stream_state = None     # input-stream state from a snapshot
         if store is not None:
             self.snapshot()          # baseline: restore never needs gen 0 WAL
 
     # -- writes ---------------------------------------------------------------
+    @staticmethod
+    def _admit(view: set, op: int, a: int, b: int) -> tuple[int, int]:
+        """Admission validation against a logical view (committed + pending
+        effects): self-loops, insert-of-present, delete-of-absent.  Returns
+        the canonical edge key; the caller folds the effect into the view
+        once the write is durable."""
+        if a == b:
+            raise ValueError("self-loops are not allowed")
+        key = (min(a, b), max(a, b))
+        if op == OP_INSERT:
+            if key in view:
+                raise ValueError(f"insert of present edge {key}")
+        elif key not in view:
+            raise ValueError(f"delete of absent edge {key}")
+        return key
+
     def submit(self, op: int, a: int, b: int) -> WriteAck:
         """Acknowledge one update.  Validation runs against the *logical*
         view (committed + pending), so an ack is a commitment: the write is
         durable in the WAL and will apply at the next generation boundary."""
         op, a, b = int(op), int(a), int(b)
-        if a == b:
-            raise ValueError("self-loops are not allowed")
-        key = (min(a, b), max(a, b))
-        if op == OP_INSERT:
-            if key in self._view:
-                raise ValueError(f"insert of present edge {key}")
-        elif key not in self._view:
-            raise ValueError(f"delete of absent edge {key}")
+        key = self._admit(self._view, op, a, b)
         # WAL first: if the append fails (disk full, closed store) the view
         # and pending queue are untouched and the submit can be retried
         wal_index = (self.store.append(self.gen + 1, [(op, a, b)])
@@ -99,9 +115,43 @@ class TrussService:
         return ack
 
     def submit_many(self, updates) -> list[WriteAck]:
-        """Per-record submit so WAL generation tags track auto-flush
-        boundaries exactly (replay regroups by tag)."""
-        return [self.submit(op, a, b) for op, a, b in updates]
+        """Batch admission: validate every record against the logical view
+        first (all-or-nothing — a bad record acks nothing), WAL-append the
+        whole batch as **one** ``append_tagged`` write, then net it into
+        generations exactly as per-record ``submit`` would.  The gen tags
+        are simulated up front so they track auto-flush boundaries
+        record-for-record (replay regroups by tag), and the store's dirty
+        tracking collapses the internal flushes to a single fsync for the
+        whole call."""
+        ups = [(int(op), int(a), int(b)) for op, a, b in updates]
+        if not ups:
+            return []
+        view = set(self._view)
+        tagged = []
+        gen, pend = self.gen, len(self._pending)
+        for op, a, b in ups:
+            key = self._admit(view, op, a, b)
+            if op == OP_INSERT:
+                view.add(key)
+            else:
+                view.discard(key)
+            tagged.append((gen + 1, op, a, b))
+            pend += 1
+            if pend >= self.flush_every:  # mirror submit's auto-flush
+                gen += 1
+                pend = 0
+        # WAL first (one write, rollback on failure leaves nothing acked)
+        start = (self.store.append_tagged(tagged)
+                 if self.store is not None else -1)
+        self._view = view
+        acks = []
+        for i, (tag, op, a, b) in enumerate(tagged):
+            acks.append(WriteAck(gen=tag,
+                                 wal_index=start + i if start >= 0 else -1))
+            self._pending.append((op, a, b))
+            if len(self._pending) >= self.flush_every:
+                self.flush()
+        return acks
 
     def handle_write(self, req: WriteRequest) -> WriteAck:
         """Typed-request form of ``submit`` (mirror of ``handle``)."""
@@ -109,14 +159,21 @@ class TrussService:
 
     def flush(self) -> int:
         """Commit pending writes as one netted fused batch; bump generation.
-        No-op when nothing is pending.  Returns the committed generation."""
+        No-op when nothing is pending.  Returns the committed generation.
+        Each commit advances the store's published frontier so replica
+        tailers know the WAL prefix below it holds only complete
+        generation groups."""
         if not self._pending:
             return self.gen
         if self.store is not None:
             self.store.fsync()
         self.graph.apply_batch(self._pending, strategy=self.strategy)
+        n_applied = len(self._pending)
         self._pending = []
         self.gen += 1
+        self._applied_wal += n_applied
+        if self.store is not None:
+            self.store.publish_commit(self.gen, self._applied_wal)
         return self.gen
 
     # -- queries (read-your-writes: flush first) ------------------------------
@@ -184,6 +241,18 @@ class TrussService:
         # self.gen is read *after* the query flushed (read-your-writes)
         return QueryResponse(req, self.gen, edges=edges)
 
+    def handle_committed(self, req: QueryRequest) -> QueryResponse:
+        """Serve one query from the *committed* state only — no flush, so
+        acked-but-pending writes stay queued on the admission schedule.
+        This is the bounded-staleness read path on a primary (lag 0 from
+        the committed generation, and it never interferes with write
+        batching the way the flush-first ``handle`` does)."""
+        pending, self._pending = self._pending, []
+        try:
+            return self.handle(req)
+        finally:
+            self._pending = pending
+
     # -- durability -----------------------------------------------------------
     def snapshot(self, stream_state: dict | None = None) -> str:
         """Flush, then checkpoint (spec, state, gen, WAL high-water mark,
@@ -205,16 +274,17 @@ class TrussService:
         if stream_state is not None:
             tree["stream"] = stream_state
         self.store.snapshot(tree)
+        self.store.publish_commit(self.gen, self._applied_wal)
         return self.store.snap_path
 
     @classmethod
-    def restore(cls, store: TrussStore, *, flush_every: int = 16,
-                strategy: str = "auto", indexed: bool = True,
-                support_method: str = "sorted") -> "TrussService":
-        """Last snapshot + WAL-tail replay => the exact pre-crash oracle."""
-        tree = store.load_snapshot()
-        if tree is None:
-            raise ValueError(f"no snapshot in {store.root}")
+    def _from_snapshot_tree(cls, tree: dict, *, store: TrussStore | None,
+                            flush_every: int = 16, strategy: str = "auto",
+                            indexed: bool = True,
+                            support_method: str = "sorted") -> "TrussService":
+        """Rebuild a service around a snapshot tree — no WAL replay.  Shared
+        by ``restore`` and the cluster ``Replica`` (which bootstraps with
+        ``store=None`` and tails the primary's WAL itself)."""
         n, d, e = (int(x) for x in tree["spec"])
         state = GraphState(*tree["state"])
         svc = cls.__new__(cls)
@@ -227,28 +297,58 @@ class TrussService:
         svc.indexed = indexed
         svc.gen = int(tree["gen"])
         svc._pending = []
+        svc._applied_wal = int(tree["wal_len"])
         svc._view = set(svc.graph._present)
         svc.stream_state = tree.get("stream")
-        svc._replay(store.read_wal(start=int(tree["wal_len"])))
         return svc
 
-    def _replay(self, tail):
+    @classmethod
+    def restore(cls, store: TrussStore, *, flush_every: int = 16,
+                strategy: str = "auto", indexed: bool = True,
+                support_method: str = "sorted") -> "TrussService":
+        """Last snapshot + WAL-tail replay => the exact pre-crash oracle."""
+        tree = store.load_snapshot()
+        if tree is None:
+            raise ValueError(f"no snapshot in {store.root}")
+        svc = cls._from_snapshot_tree(tree, store=store,
+                                      flush_every=flush_every,
+                                      strategy=strategy, indexed=indexed,
+                                      support_method=support_method)
+        svc._replay(store.read_wal(start=svc._applied_wal))
+        store.publish_commit(svc.gen, svc._applied_wal)
+        return svc
+
+    def _replay(self, tail, max_groups: int | None = None) -> int:
         """Apply WAL-tail records grouped by their generation tag — the same
         batch boundaries the live service flushed at, so the replayed path
-        runs the identical netted ``apply_batch`` sequence."""
+        runs the identical netted ``apply_batch`` sequence.  Advances
+        ``_applied_wal`` per group, so a capped replay (``max_groups``, the
+        cluster replica's incremental poll) always stops at a group
+        boundary and is resumable.  Returns the number of groups applied."""
+        groups = 0
         group: list = []
         group_gen = None
-        for gen, op, a, b in tail:
-            if group_gen is not None and gen != group_gen:
-                self.graph.apply_batch(group, strategy=self.strategy)
-                self.gen = group_gen
-                group = []
-            group_gen = gen
-            group.append((op, a, b))
-        if group:
+
+        def commit_group():
+            nonlocal groups, group, group_gen
             self.graph.apply_batch(group, strategy=self.strategy)
             self.gen = group_gen
+            self._applied_wal += len(group)
+            groups += 1
+            group, group_gen = [], None
+
+        for gen, op, a, b in tail:
+            if group and gen != group_gen:
+                commit_group()
+                if max_groups is not None and groups >= max_groups:
+                    break
+            group_gen = gen
+            group.append((op, a, b))
+        else:
+            if group:
+                commit_group()
         self._view = set(self.graph._present)
+        return groups
 
     # -- introspection --------------------------------------------------------
     def stats(self) -> dict:
@@ -257,9 +357,21 @@ class TrussService:
             "n_edges": len(self.graph._present),
             "pending": len(self._pending),
             "wal_len": self.store.wal_len if self.store else 0,
+            "wal_applied": self._applied_wal,
             "tracked_ks": tuple(self.graph.index.tracked),
             "max_truss": self.graph.max_truss(),
         }
+        if self.store is not None:
+            # replication lag per tailer, from the lease files the replicas
+            # publish on every poll (generations + WAL records behind us)
+            leases = self.store.read_replicas()
+            if leases:
+                out["replicas"] = {
+                    rid: {"gen": int(m.get("gen", 0)),
+                          "lag_gens": self.gen - int(m.get("gen", 0)),
+                          "lag_records":
+                              self._applied_wal - int(m.get("wal_applied", 0))}
+                    for rid, m in leases.items()}
         # peel cost of the last fused flush (absent after progressive
         # flushes, which run Algorithms 1/2 instead of a re-peel)
         ps = self.graph.last_peel_stats

@@ -22,39 +22,75 @@ dropped by atomically replacing the log with a ``# base <n>`` header (the
 count of compacted records) so record indices stay global while restart
 cost is O(tail since last snapshot), not O(write history).
 
+The same machinery doubles as a **physical replication stream**
+(``repro.cluster``): a store opened with ``readonly=True`` never mutates
+the directory (no torn-tail truncation, no append handle) and can tail the
+primary's log with ``read_wal``; two sidecar metadata files coordinate the
+cluster without touching the log format:
+
+* ``commit.json`` — the primary's committed frontier ``(gen, wal_len)``,
+  atomically replaced at every generation flush.  Records below the
+  frontier form *complete* generation groups, so a replica that applies
+  exactly up to it commits the same batches the primary did (bitwise-equal
+  phi at every generation boundary).
+* ``replicas/<id>.json`` — per-replica lease files (applied gen, applied
+  WAL index, wall-clock heartbeat) published by each tailer; the primary's
+  ``stats()`` and the router read these for lag reporting.
+
 Layout of a store directory::
 
     <root>/wal.log        optional "# base <n>" header, then append-only
                           "gen op a b" records, one per line
     <root>/snapshot.npz   latest checkpoint (atomic-renamed into place)
+    <root>/commit.json    committed frontier {gen, wal_len} (primary-owned)
+    <root>/replicas/      per-replica lease files {gen, wal_applied, ts}
 """
 from __future__ import annotations
 
+import json
 import os
 import tempfile
+import time
 
 from ..training import checkpoint
 
 _SNAPSHOT = "snapshot.npz"
 _WAL = "wal.log"
+_COMMIT = "commit.json"
+_REPLICAS = "replicas"
 _BASE_PREFIX = "# base "
 
 
 class TrussStore:
-    """WAL + snapshot directory. One writer (the service); any reader."""
+    """WAL + snapshot directory. One writer (the service); any reader.
 
-    def __init__(self, root: str):
+    ``readonly=True`` opens the directory as a replication *consumer*: all
+    mutating entry points raise, the init scan never truncates a torn tail
+    (the primary may still be completing it), and ``read_wal`` keeps working
+    as the primary appends/compacts underneath.
+    """
+
+    def __init__(self, root: str, readonly: bool = False):
         self.root = root
-        os.makedirs(root, exist_ok=True)
+        self.readonly = readonly
+        if not readonly:
+            os.makedirs(root, exist_ok=True)
         self.wal_path = os.path.join(root, _WAL)
         self.snap_path = os.path.join(root, _SNAPSHOT)
         self.base = 0     # records compacted away into the snapshot
         self.wal_len = 0  # global record count (base + records on disk)
+        self._wal_f = None
+        # read_wal tail cache: (byte offset, global index) just past the last
+        # fully-parsed record, so repeated tailing is O(new records) instead
+        # of an O(history) rescan.  Invalidated on compaction / rollback.
+        self._tail_cache: tuple[int, int] | None = None
         if os.path.exists(self.wal_path):
             # Count complete records; an OS/power failure can tear the final
             # append, so truncate a malformed tail rather than letting the
             # next append concatenate onto half a record (recovery then
             # bounds the loss to the torn record, as the model above states).
+            # A readonly open never truncates: the tail it sees may simply be
+            # an append the live primary has not finished flushing.
             valid_bytes = 0
             with open(self.wal_path, "rb") as f:
                 for i, line in enumerate(f):
@@ -68,10 +104,16 @@ class TrussStore:
                     valid_bytes += len(line)
                     self.wal_len += 1
             self.wal_len += self.base
-            if valid_bytes < os.path.getsize(self.wal_path):
+            if not readonly and valid_bytes < os.path.getsize(self.wal_path):
                 with open(self.wal_path, "rb+") as f:
                     f.truncate(valid_bytes)
-        self._wal_f = open(self.wal_path, "a")
+        if not readonly:
+            self._wal_f = open(self.wal_path, "a")
+        self._synced_len = self.wal_len  # records already fsynced to disk
+
+    def _check_writable(self):
+        if self.readonly:
+            raise ValueError("store is open read-only (replica tailer)")
 
     @staticmethod
     def _parse(line) -> tuple[int, int, int, int] | None:
@@ -91,17 +133,30 @@ class TrussStore:
         finally:
             os.close(fd)
 
+    @staticmethod
+    def _replace_json(directory: str, path: str, obj: dict):
+        fd, tmp = tempfile.mkstemp(dir=directory, suffix=".jsontmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(obj, f)
+        os.replace(tmp, path)
+
     # -- WAL -----------------------------------------------------------------
     def append(self, gen: int, records) -> int:
-        """Append ``(op, a, b)`` records committing in generation ``gen``.
-        Returns the (global) WAL index of the first record appended.  A
-        failed append (e.g. disk full) rolls the file back to the last
+        """Append ``(op, a, b)`` records committing in generation ``gen``."""
+        return self.append_tagged([(gen, op, a, b) for op, a, b in records])
+
+    def append_tagged(self, records) -> int:
+        """Append ``(gen, op, a, b)`` records — one buffered write per call,
+        so a batched submit pays a single syscall path regardless of batch
+        size.  Returns the (global) WAL index of the first record appended.
+        A failed append (e.g. disk full) rolls the file back to the last
         record boundary, so a retry can never concatenate onto a torn
         half-record."""
+        self._check_writable()
         start = self.wal_len
         offset = self._wal_f.tell()
         try:
-            for op, a, b in records:
+            for gen, op, a, b in records:
                 self._wal_f.write(f"{int(gen)} {int(op)} {int(a)} {int(b)}\n")
             self._wal_f.flush()
         except Exception:
@@ -112,33 +167,119 @@ class TrussStore:
             with open(self.wal_path, "rb+") as f:
                 f.truncate(offset)
             self._wal_f = open(self.wal_path, "a")
+            self._tail_cache = None  # offsets past the truncation are invalid
             raise
         self.wal_len += len(records)
         return start
 
     def fsync(self):
-        """Force acknowledged records to disk (called at flush/snapshot)."""
+        """Force acknowledged records to disk (called at flush/snapshot).
+        No-op when nothing was appended since the last sync, so a batched
+        submit that crosses several flush boundaries still pays exactly one
+        fsync."""
+        self._check_writable()
+        if self._synced_len == self.wal_len:
+            return
         os.fsync(self._wal_f.fileno())
+        self._synced_len = self.wal_len
 
-    def read_wal(self, start: int = 0) -> list[tuple[int, int, int, int]]:
+    def read_wal(self, start: int = 0,
+                 stop: int | None = None) -> list[tuple[int, int, int, int]]:
         """``(gen, op, a, b)`` records from global WAL index ``start`` on
         (``start`` below the compaction base yields the tail that still
-        exists).  Stops at the first malformed record — by construction only
-        a torn tail."""
+        exists).  Stops at the first malformed record — a torn tail, or (for
+        a readonly tailer) an append the primary is still completing; the
+        cached resume offset never advances past a complete record, so the
+        next call re-reads it once it is whole.  Repeated tailing with a
+        monotonically increasing ``start`` is O(new records).  ``stop``
+        bounds the read (exclusive) *and parks the cache there* — a tailer
+        that consumes only up to the committed frontier passes it so the
+        next poll resumes from the frontier instead of rescanning from 0
+        (a cache parked past ``start`` is useless)."""
         if not os.path.exists(self.wal_path):
             return []
         out = []
-        with open(self.wal_path) as f:
-            idx = self.base
-            for i, line in enumerate(f):
-                if i == 0 and line.startswith(_BASE_PREFIX):
-                    continue
-                rec = self._parse(line)
+        with open(self.wal_path, "rb") as f:
+            size = os.fstat(f.fileno()).st_size
+            first = f.readline()
+            base, hdr = 0, 0
+            if first.endswith(b"\n") and first.startswith(_BASE_PREFIX.encode()):
+                base = int(first.split()[2])
+                hdr = len(first)
+            if base != self.base:
+                # the log was compacted underneath us (readonly tailer): the
+                # cached offset refers to the replaced file
+                self.base = base
+                self.wal_len = max(self.wal_len, base)
+                self._tail_cache = None
+            pos, idx = hdr, base
+            tc = self._tail_cache
+            if tc is not None and tc[1] <= max(start, base) and hdr <= tc[0] <= size:
+                pos, idx = tc
+            f.seek(pos)
+            for line in f:
+                if stop is not None and idx >= stop:
+                    break
+                rec = self._parse(line) if line.endswith(b"\n") else None
                 if rec is None:
                     break
                 if idx >= start:
                     out.append(rec)
+                pos += len(line)
                 idx += 1
+            self._tail_cache = (pos, idx)
+            if idx > self.wal_len:  # readonly observer of a live writer
+                self.wal_len = idx
+        return out
+
+    # -- cluster metadata ----------------------------------------------------
+    def publish_commit(self, gen: int, wal_len: int):
+        """Advertise the committed frontier: every WAL record below
+        ``wal_len`` belongs to a generation the primary has applied, so a
+        tailer that stops exactly there only ever applies complete
+        generation groups.  Atomic replace; advisory (recovery truth stays
+        snapshot + WAL), so no fsync."""
+        self._check_writable()
+        self._replace_json(self.root, os.path.join(self.root, _COMMIT),
+                           {"gen": int(gen), "wal_len": int(wal_len)})
+
+    def read_commit(self) -> dict | None:
+        """The primary's committed frontier, or None before the first one."""
+        try:
+            with open(os.path.join(self.root, _COMMIT)) as f:
+                return json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return None
+
+    def publish_replica(self, replica_id: str, meta: dict):
+        """Write this replica's lease file (applied frontier + heartbeat).
+        Replicas own their lease, so this is allowed on readonly stores."""
+        d = os.path.join(self.root, _REPLICAS)
+        os.makedirs(d, exist_ok=True)
+        self._replace_json(d, os.path.join(d, f"{replica_id}.json"),
+                           {**meta, "ts": time.time()})
+
+    def remove_replica(self, replica_id: str):
+        """Retire a lease (replica shut down or promoted to primary)."""
+        try:
+            os.remove(os.path.join(self.root, _REPLICAS, f"{replica_id}.json"))
+        except FileNotFoundError:
+            pass
+
+    def read_replicas(self) -> dict[str, dict]:
+        """All replica leases, keyed by replica id."""
+        d = os.path.join(self.root, _REPLICAS)
+        if not os.path.isdir(d):
+            return {}
+        out = {}
+        for name in sorted(os.listdir(d)):
+            if not name.endswith(".json"):
+                continue
+            try:
+                with open(os.path.join(d, name)) as f:
+                    out[name[:-len(".json")]] = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                continue  # lease being replaced underneath us
         return out
 
     # -- snapshots -----------------------------------------------------------
@@ -148,6 +289,7 @@ class TrussStore:
         restarts as a header-only file at the new base.  Snapshot data and
         the new header are fsynced *before* the old WAL prefix is dropped —
         a power failure can never lose both."""
+        self._check_writable()
         checkpoint.save(self.snap_path, tree)
         self._fsync_path(self.snap_path)
         self._fsync_path(self.root)  # persist checkpoint.save's rename
@@ -164,6 +306,8 @@ class TrussStore:
         self._fsync_path(self.root)  # persist the rename
         self.base = base
         self._wal_f = open(self.wal_path, "a")
+        self._tail_cache = None      # offsets referred to the replaced file
+        self._synced_len = self.wal_len
 
     def load_snapshot(self) -> dict | None:
         if not os.path.exists(self.snap_path):
@@ -171,4 +315,6 @@ class TrussStore:
         return checkpoint.restore(self.snap_path)
 
     def close(self):
-        self._wal_f.close()
+        if self._wal_f is not None:
+            self._wal_f.close()
+            self._wal_f = None

@@ -1,0 +1,431 @@
+"""Tier-1 tests for the replicated serving cluster (ISSUE-4).
+
+The load-bearing property is **replica equivalence**: a replica that
+bootstraps from the primary's snapshot and tails the committed WAL must
+hold a ``GraphState`` that is *bitwise-equal* to the primary's at every
+generation boundary it reaches — including after randomized kill-point
+restarts (mid snapshot-install, mid WAL-tail apply) and after promotion to
+primary — and both must match the pure-Python oracle on the acked stream.
+
+Routing invariants ride on top: ``read_your_writes`` never serves below the
+session's gen token, ``bounded(g)`` never serves more than ``g``
+generations behind the primary's committed gen, and ``strong`` always goes
+to the primary.
+
+Same pinned ``GraphSpec`` trick as ``test_service`` (one jit cache for the
+module).
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import QueryRouter, Replica, query_from_record
+from repro.core import oracle
+from repro.data.streams import (READ, WRITE, MixedWorkloadStream,
+                                make_update_stream)
+from repro.service import (BOUNDED, MAX_K, MEMBERS, READ_YOUR_WRITES, STRONG,
+                           QueryRequest, TrussService, TrussStore)
+
+N = 13
+D_MAX = 16
+E_CAP = 160
+
+
+def _svc(edges, tmpdir, **kw):
+    kw.setdefault("tracked_ks", (3, 4))
+    kw.setdefault("flush_every", 5)
+    return TrussService(N, edges, d_max=D_MAX, e_cap=E_CAP,
+                        store=TrussStore(str(tmpdir)), **kw)
+
+
+def _random_graph(rng, p, n=N):
+    return [(i, j) for i in range(n) for j in range(i + 1, n)
+            if rng.random() < p]
+
+
+def _assert_bitwise_equal(a: TrussService, b):
+    """Every GraphState array identical — not just phi_dict equality."""
+    st_b = b.svc.graph.state if isinstance(b, Replica) else b.graph.state
+    for name, x, y in zip(a.graph.state._fields, a.graph.state, st_b):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), name
+
+
+# -- replica tailing ----------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_replica_bitwise_tracks_primary(seed, tmp_path):
+    """At every committed generation boundary the polled replica's arrays
+    equal the primary's bit for bit, and both equal the oracle."""
+    rng = np.random.default_rng(seed)
+    edges = _random_graph(rng, 0.3)
+    stream = make_update_stream(np.asarray(edges), N, 30, seed=seed + 20)
+    svc = _svc(edges, tmp_path)
+    rep = Replica(str(tmp_path), "r0")
+    orc = oracle.Oracle(N, edges)
+    for i, rec in enumerate(stream):
+        svc.submit(*map(int, rec))
+        if rec[0]:
+            orc.insert(*rec[1:])
+        else:
+            orc.delete(*rec[1:])
+        if i % 5 == 4:  # flush_every=5 -> a generation just committed
+            assert rep.poll() == svc.gen
+            _assert_bitwise_equal(svc, rep)
+            assert rep.svc.graph.phi_dict() == orc.phi
+    # mid-batch: replica sits at the last committed boundary, not ahead
+    svc.submit(1, 0, 1) if (0, 1) not in svc._view else svc.submit(0, 0, 1)
+    assert rep.poll() == svc.gen
+
+
+def test_replica_across_compaction(tmp_path):
+    """A snapshot compacts the WAL prefix; a replica that was parked before
+    the compaction point reinstalls the newer snapshot and keeps tailing."""
+    rng = np.random.default_rng(3)
+    edges = _random_graph(rng, 0.3)
+    stream = make_update_stream(np.asarray(edges), N, 30, seed=23)
+    svc = _svc(edges, tmp_path)
+    rep = Replica(str(tmp_path), "r0")   # bootstrapped at gen 0
+    for rec in stream[:20]:
+        svc.submit(*map(int, rec))
+    svc.snapshot()                       # compacts: base jumps past rep
+    for rec in stream[20:]:
+        svc.submit(*map(int, rec))
+    svc.flush()
+    assert svc.store.base > rep.wal_applied
+    assert rep.poll() == svc.gen         # snapshot-install path
+    _assert_bitwise_equal(svc, rep)
+    orc = oracle.Oracle(N, edges)
+    orc.apply(stream)
+    assert rep.svc.graph.phi_dict() == orc.phi
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_replica_crash_restart_randomized_kill_points(seed, tmp_path):
+    """Kill the replica at a randomized point (bootstrapped but mid
+    WAL-tail apply via a capped poll, with a primary snapshot landing at a
+    random spot so restart may cross a compaction = mid snapshot-install);
+    a fresh Replica over the same store must converge to the primary's
+    bitwise state and the oracle."""
+    rng = np.random.default_rng(seed + 40)
+    edges = _random_graph(rng, 0.3)
+    stream = make_update_stream(np.asarray(edges), N, 36, seed=seed + 50)
+    snap_at = int(rng.integers(5, 30))
+    park_gens = int(rng.integers(1, 4))
+    svc = _svc(edges, tmp_path)
+    rep = Replica(str(tmp_path), "r0")
+    for i, rec in enumerate(stream):
+        svc.submit(*map(int, rec))
+        if i == snap_at:
+            svc.snapshot()
+    svc.flush()
+    rep.poll(max_gens=park_gens)  # apply only a prefix of the tail...
+    del rep                       # ...then crash mid-apply
+
+    restarted = Replica(str(tmp_path), "r0")  # may land mid-history
+    assert restarted.poll() == svc.gen
+    _assert_bitwise_equal(svc, restarted)
+    orc = oracle.Oracle(N, edges)
+    orc.apply(stream)
+    assert restarted.svc.graph.phi_dict() == orc.phi
+
+
+# -- promotion / failover -----------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_promotion_failover_randomized_kill_points(seed, tmp_path):
+    """Kill the primary after a random number of acked writes (snapshot at
+    another random point, replica parked at a random lag); the promoted
+    replica must equal the oracle on the *full* acked prefix — including
+    acked-but-uncommitted WAL tail records — and keep serving writes."""
+    rng = np.random.default_rng(seed + 60)
+    edges = _random_graph(rng, 0.3)
+    stream = make_update_stream(np.asarray(edges), N, 40, seed=seed + 70)
+    kill = int(rng.integers(8, len(stream)))
+    snap_at = int(rng.integers(0, kill))
+    park_gens = int(rng.integers(0, 4))
+
+    svc = _svc(edges, tmp_path)
+    rep = Replica(str(tmp_path), "r0")
+    for i, rec in enumerate(stream[:kill]):
+        svc.submit(*map(int, rec))
+        if i == snap_at:
+            svc.snapshot()
+    if park_gens:
+        rep.poll(max_gens=park_gens)
+    del svc  # primary crash: pending writes acked in the WAL but unapplied
+
+    promoted = rep.promote()
+    orc = oracle.Oracle(N, edges)
+    orc.apply(stream[:kill])
+    assert promoted.graph.phi_dict() == orc.phi
+    # the new primary keeps serving: writes, reads, snapshot/restore
+    promoted.submit_many([tuple(map(int, r)) for r in stream[kill:]])
+    promoted.flush()
+    orc.apply(stream[kill:])
+    assert promoted.graph.phi_dict() == orc.phi
+    promoted.snapshot()
+    del promoted
+    again = TrussService.restore(TrussStore(str(tmp_path)))
+    assert again.graph.phi_dict() == orc.phi
+
+
+def test_router_promotes_most_caught_up_replica(tmp_path):
+    edges = [(0, 1), (1, 2), (0, 2), (2, 3)]
+    svc = _svc(edges, tmp_path, flush_every=2)
+    fresh = Replica(str(tmp_path), "fresh")
+    stale = Replica(str(tmp_path), "stale")
+    svc.submit_many([(1, 0, 3), (1, 1, 3), (1, 0, 4), (1, 1, 4)])
+    fresh.poll()
+    router = QueryRouter(svc, [stale, fresh], poll_on_miss=False)
+    del svc
+    promoted = router.promote()
+    assert router.primary is promoted
+    assert [r.replica_id for r in router.replicas] == ["stale"]
+    # the promoted store took over the lease directory
+    assert "fresh" not in promoted.store.read_replicas()
+    assert promoted.max_k(0, 3) >= 2
+
+
+# -- consistency routing ------------------------------------------------------
+
+def test_routing_policies(tmp_path):
+    edges = [(0, 1), (1, 2), (0, 2)]
+    svc = _svc(edges, tmp_path, flush_every=3)
+    rep = Replica(str(tmp_path), "r0")
+    router = QueryRouter(svc, [rep], poll_on_miss=False)
+    sess = router.session()
+    # advance the primary two generations; the replica stays parked at 0
+    sess.submit_many([(1, 0, 3), (1, 1, 3), (1, 2, 3),
+                      (1, 0, 4), (1, 1, 4), (1, 2, 4)])
+    assert svc.gen == 2 and rep.gen == 0 and sess.token == 2
+
+    # strong: always the primary
+    r = sess.query(QueryRequest(MEMBERS, k=3, consistency=STRONG))
+    assert r.served_by == "primary" and r.gen == svc.gen
+
+    # bounded(g): the stale replica qualifies only when its lag <= g
+    r = sess.query(QueryRequest(MEMBERS, k=3, consistency=BOUNDED, bound=5))
+    assert r.served_by == "r0" and r.gen == 0 and svc.gen - r.gen <= 5
+    r = sess.query(QueryRequest(MEMBERS, k=3, consistency=BOUNDED, bound=1))
+    assert r.served_by == "primary"  # replica 2 gens behind > bound 1
+
+    # read-your-writes: the parked replica is below the token -> primary
+    r = sess.query(QueryRequest(MAX_K, edge=(2, 3),
+                                consistency=READ_YOUR_WRITES))
+    assert r.served_by == "primary" and r.gen >= sess.token and r.value == 4
+
+    # once the replica catches up it takes RYW and bounded(0) reads
+    rep.poll()
+    for consistency, bound in ((READ_YOUR_WRITES, 0), (BOUNDED, 0)):
+        r = sess.query(QueryRequest(MAX_K, edge=(2, 3),
+                                    consistency=consistency, bound=bound))
+        assert r.served_by == "r0" and r.gen >= sess.token and r.value == 4
+
+
+def test_bounded_primary_fallback_serves_committed_without_flush(tmp_path):
+    """A bounded read that falls back to the primary (no replica within
+    bound) must serve the committed generation WITHOUT flushing pending
+    writes — bounded reads never interfere with write batching."""
+    edges = [(0, 1), (1, 2), (0, 2)]
+    svc = _svc(edges, tmp_path, flush_every=100)
+    router = QueryRouter(svc, [], poll_on_miss=False)  # zero replicas
+    sess = router.session()
+    sess.submit(1, 0, 3)
+    assert len(svc._pending) == 1 and svc.gen == 0
+    r = sess.query(QueryRequest(MEMBERS, k=2, consistency=BOUNDED, bound=3))
+    assert r.served_by == "primary" and r.gen == 0
+    assert len(svc._pending) == 1          # still queued: no flush happened
+    assert (0, 3) not in {tuple(e) for e in r.edges}  # committed view only
+    # strong on the same router still flushes and sees the write
+    r = sess.query(QueryRequest(MEMBERS, k=2, consistency=STRONG))
+    assert r.gen == 1 and (0, 3) in {tuple(e) for e in r.edges}
+
+
+def test_replica_poll_keeps_tail_cache_hot(tmp_path):
+    """The poll loop must stay O(new records): with an uncommitted WAL tail
+    present (the deployment steady state), the store's tail cache parks at
+    the committed frontier, so the next poll resumes there instead of
+    rescanning from byte 0."""
+    edges = [(0, 1), (1, 2), (0, 2)]
+    svc = _svc(edges, tmp_path, flush_every=4)
+    rep = Replica(str(tmp_path), "r0")
+    # 4 committed + 2 acked-but-uncommitted records in the WAL
+    svc.submit_many([(1, 0, 3), (1, 1, 3), (1, 2, 3), (1, 0, 4),
+                     (1, 1, 4), (1, 2, 4)])
+    assert rep.poll() == 1
+    assert rep.store._tail_cache[1] == 4   # parked AT the frontier...
+    svc.flush()
+    assert rep.poll() == 2                 # ...so this resumes from it
+    assert rep.store._tail_cache[1] == 6
+    _assert_bitwise_equal(svc, rep)
+
+
+def test_router_poll_on_miss_catches_replica_up(tmp_path):
+    edges = [(0, 1), (1, 2), (0, 2)]
+    svc = _svc(edges, tmp_path, flush_every=2)
+    rep = Replica(str(tmp_path), "r0")
+    router = QueryRouter(svc, [rep])  # poll_on_miss=True
+    sess = router.session()
+    sess.submit_many([(1, 0, 3), (1, 1, 3)])
+    assert rep.gen == 0
+    r = sess.query(QueryRequest(MEMBERS, k=2, consistency=READ_YOUR_WRITES))
+    assert r.served_by == "r0" and r.gen >= sess.token  # polled, then served
+
+
+def test_query_request_consistency_validation():
+    with pytest.raises(ValueError):
+        QueryRequest(MEMBERS, consistency="eventual")
+    with pytest.raises(ValueError):
+        QueryRequest(MEMBERS, consistency=BOUNDED, bound=-1)
+
+
+# -- satellites ---------------------------------------------------------------
+
+def test_wal_tail_cache(tmp_path):
+    """Repeated tailing resumes from the cached offset (O(new records)),
+    and the cache invalidates across compaction and external appends."""
+    store = TrussStore(str(tmp_path))
+    store.append(1, [(1, 0, 1), (1, 0, 2)])
+    assert [r[3] for r in store.read_wal()] == [1, 2]
+    pos0 = store._tail_cache
+    assert pos0 is not None and pos0[1] == 2
+    store.append(2, [(1, 0, 3)])
+    assert store.read_wal(start=2) == [(2, 1, 0, 3)]  # tail-only read
+    assert store._tail_cache[1] == 3
+    # a lower start than the cache forces (and survives) a full rescan
+    assert len(store.read_wal(0)) == 3
+
+    # a readonly tailer keeps its own cache against the live writer
+    ro = TrussStore(str(tmp_path), readonly=True)
+    assert len(ro.read_wal(0)) == 3
+    store.append(3, [(1, 0, 4), (1, 0, 5)])
+    assert [r[3] for r in ro.read_wal(start=3)] == [4, 5]
+    assert ro.wal_len == 5
+
+    # compaction replaces the file: both caches must re-anchor on the base
+    store._compact(5)
+    assert store.read_wal(0) == [] and store.base == 5
+    store.append(4, [(1, 0, 6)])
+    assert ro.read_wal(start=5) == [(4, 1, 0, 6)]
+    assert ro.base == 5
+    store.close()
+
+
+def test_readonly_store_never_mutates(tmp_path):
+    store = TrussStore(str(tmp_path))
+    store.append(1, [(1, 0, 1)])
+    store.close()
+    # leave a torn tail; a readonly open must not truncate it
+    with open(tmp_path / "wal.log", "a") as f:
+        f.write("2 1 0")
+    size = (tmp_path / "wal.log").stat().st_size
+    ro = TrussStore(str(tmp_path), readonly=True)
+    assert ro.wal_len == 1  # torn record not counted...
+    assert (tmp_path / "wal.log").stat().st_size == size  # ...nor truncated
+    for call in (lambda: ro.append(1, [(1, 2, 3)]),
+                 lambda: ro.fsync(),
+                 lambda: ro.snapshot({}),
+                 lambda: ro.publish_commit(1, 1)):
+        with pytest.raises(ValueError, match="read-only"):
+            call()
+    # a torn tail parks the reader cache *before* the torn record; once the
+    # writer completes the line, the tailer picks the whole record up
+    assert ro.read_wal(start=1) == []
+    rw = TrussStore(str(tmp_path))  # truncates the torn tail...
+    rw.append(2, [(1, 0, 5)])      # ...and appends a complete record
+    assert ro.read_wal(start=1) == [(2, 1, 0, 5)]
+    rw.close()
+
+
+def test_submit_many_batches_wal_appends(tmp_path):
+    """submit_many = one append_tagged + at most one fsync per call, with
+    gen tags identical to per-record submit across auto-flush boundaries."""
+    rng = np.random.default_rng(9)
+    edges = _random_graph(rng, 0.35)
+    stream = make_update_stream(np.asarray(edges), N, 13, seed=31)
+    ups = [tuple(map(int, r)) for r in stream]
+
+    ref = _svc(edges, tmp_path / "ref", flush_every=5)
+    ref_acks = [ref.submit(*u) for u in ups]
+
+    bat = _svc(edges, tmp_path / "bat", flush_every=5)
+    appends, fsyncs = [], []
+    orig_append, orig_fsync = bat.store.append_tagged, bat.store.fsync
+    bat.store.append_tagged = lambda recs: (appends.append(len(recs)),
+                                            orig_append(recs))[1]
+
+    def counting_fsync():
+        if bat.store._synced_len != bat.store.wal_len:
+            fsyncs.append(1)
+        orig_fsync()
+    bat.store.fsync = counting_fsync
+    bat_acks = bat.submit_many(ups)
+
+    assert appends == [len(ups)]          # ONE WAL append for the batch
+    assert len(fsyncs) == 1               # ONE real fsync despite 2 flushes
+    assert [a.gen for a in bat_acks] == [a.gen for a in ref_acks]
+    assert [a.wal_index for a in bat_acks] == [a.wal_index for a in ref_acks]
+    assert bat.store.read_wal() == ref.store.read_wal()  # byte-identical log
+    assert bat.gen == ref.gen
+    _assert_bitwise_equal(ref, bat)
+
+    # replay across the batched log reconstructs the same generations
+    bat.store.close()
+    del bat
+    restored = TrussService.restore(TrussStore(str(tmp_path / "bat")),
+                                    flush_every=5)
+    orc = oracle.Oracle(N, edges)
+    orc.apply(stream)
+    assert restored.graph.phi_dict() == orc.phi
+
+
+def test_submit_many_rejects_bad_batch_without_acks(tmp_path):
+    svc = _svc([(0, 1)], tmp_path, flush_every=10)
+    wal_before = svc.store.wal_len
+    with pytest.raises(ValueError):
+        svc.submit_many([(1, 0, 2), (1, 0, 2)])  # dup insert inside batch
+    assert svc.store.wal_len == wal_before  # nothing acked, nothing logged
+    assert svc._pending == [] and (0, 2) not in svc._view
+    svc.submit_many([(1, 0, 2)])            # the store still works
+    assert (0, 2) in svc._view
+
+
+def test_mixed_workload_stream_deterministic_and_zipfian():
+    edges = np.asarray([(0, 1), (1, 2), (2, 3)])
+    a = MixedWorkloadStream(edges, 50, chunk=64, read_frac=0.8, seed=7)
+    b = MixedWorkloadStream(edges, 50, chunk=64, read_frac=0.8, seed=7)
+    recs = [r for _ in range(4) for r in a.next()]
+    assert recs == [r for _ in range(4) for r in b.next()]
+    reads = [r for r in recs if r[0] == READ]
+    writes = [r for r in recs if r[0] == WRITE]
+    assert len(reads) + len(writes) == len(recs)
+    assert 0.6 < len(reads) / len(recs) < 0.95
+    # zipf skew: the top node id dominates the community-seed keys
+    seeds = [r[3] for r in reads if r[1] == "community"]
+    assert seeds.count(0) > len(seeds) / 10
+    # writes are valid when applied in order (insert absent / delete present)
+    present = {tuple(map(int, e)) for e in edges}
+    for _, op, u, v in writes:
+        key = (min(u, v), max(u, v))
+        assert (key not in present) if op else (key in present)
+        present.add(key) if op else present.discard(key)
+    # every read record converts to a well-formed QueryRequest
+    for r in reads:
+        query_from_record(r, consistency=BOUNDED, bound=1)
+    # state_dict round-trip resumes the identical stream
+    state = a.state_dict()
+    c = MixedWorkloadStream(edges, 50, chunk=64, read_frac=0.8, seed=7)
+    c.load_state_dict(state)
+    assert a.next() == c.next()
+
+
+def test_replica_lease_and_lag_stats(tmp_path):
+    edges = [(0, 1), (1, 2), (0, 2)]
+    svc = _svc(edges, tmp_path, flush_every=2)
+    rep = Replica(str(tmp_path), "r7")
+    svc.submit_many([(1, 0, 3), (1, 1, 3), (1, 2, 3), (1, 0, 4)])
+    st = svc.stats()["replicas"]["r7"]
+    assert st["lag_gens"] == svc.gen and st["lag_records"] > 0
+    rep.poll()
+    st = svc.stats()["replicas"]["r7"]
+    assert st["lag_gens"] == 0 and st["lag_records"] == 0
+    assert rep.stats()["lag_gens"] == 0
