@@ -113,7 +113,9 @@ def main(rows: list, quick: bool = True):
     try:
         wt = wall_time_subprocess()
         for k, us in wt.items():
-            rows.append((f"dist_truss/walltime_8dev/{k}", us, ""))
+            # 4-tuple: the measurement ran in an 8-device subprocess, not
+            # this process — stamp the real count into results.csv
+            rows.append((f"dist_truss/walltime_8dev/{k}", us, "", 8))
     except Exception as e:  # pragma: no cover — env without subprocess headroom
         print(f"  (wall-time subprocess skipped: {e})")
     return rows

@@ -2,7 +2,11 @@
 
     PYTHONPATH=src python -m benchmarks.run [--full]
 
-Prints ``name,us_per_call,derived`` CSV and writes benchmarks/results.csv.
+Prints ``name,us_per_call,derived,devices,platform`` CSV and writes
+benchmarks/results.csv.  Rows are 3-tuples ``(name, us, derived)`` —
+stamped with this process's device count and backend — or 4-tuples with an
+explicit device count (benchmarks that sweep device counts in
+subprocesses), so single- and multi-device numbers never silently merge.
 """
 from __future__ import annotations
 
@@ -20,16 +24,17 @@ def main() -> None:
                     help="paper-scale sweep (slow on CPU)")
     ap.add_argument("--only", default=None,
                     help="comma list: truss,batch,peel,service,cluster,"
-                         "affected,kernels,distributed,roofline")
+                         "affected,kernels,distributed,sharded,roofline")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (affected_set, batch_update, cluster_scaling,
                             distributed_bench, kernels_bench, peel_engine,
-                            roofline, service_throughput, truss_maintenance)
+                            roofline, service_throughput, sharded_peel,
+                            truss_maintenance)
 
     selected = set((args.only or
                     "truss,batch,peel,service,cluster,affected,kernels,"
-                    "distributed,roofline").split(","))
+                    "distributed,sharded,roofline").split(","))
     rows: list = []
     if "truss" in selected:
         print("== truss maintenance (paper Figs. 8-10) ==")
@@ -55,23 +60,37 @@ def main() -> None:
     if "distributed" in selected:
         print("== distributed truss collectives ==")
         distributed_bench.main(rows, quick=not args.full)
+    if "sharded" in selected:
+        print("== sharded peel substrate scaling (ISSUE-5) ==")
+        sharded_peel.main(rows, quick=not args.full)
     if "roofline" in selected:
         print("== roofline (from dry-run artifacts) ==")
         roofline.main(rows)
 
+    import jax
+    ndev_default = jax.device_count()
+    platform = jax.default_backend()
+
     out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results.csv")
     # A partial run (--only) merges into the existing csv by row name so the
-    # perf trajectory keeps every section's latest numbers.
+    # perf trajectory keeps every section's latest numbers.  Legacy 3-column
+    # rows are padded so the file stays uniform under the 5-column header.
     merged: dict[str, str] = {}
     if args.only and os.path.exists(out):
         with open(out) as f:
             for line in f.read().splitlines()[1:]:
                 if line.strip():
+                    pad = 4 - line.count(",")
+                    if pad > 0:
+                        line += "," * pad
                     merged[line.split(",", 1)[0]] = line
-    for name, us, derived in rows:
-        merged[name] = f"{name},{us:.1f},{derived}"
-    print("\nname,us_per_call,derived")
-    lines = ["name,us_per_call,derived"]
+    for row in rows:
+        name, us, derived = row[:3]
+        ndev = row[3] if len(row) > 3 else ndev_default
+        merged[name] = f"{name},{us:.1f},{derived},{ndev},{platform}"
+    header = "name,us_per_call,derived,devices,platform"
+    print("\n" + header)
+    lines = [header]
     for line in merged.values():
         print(line)
         lines.append(line)

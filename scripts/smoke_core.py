@@ -1,8 +1,12 @@
 """Dev smoke: core truss engine vs oracle on small random graphs, a ~30s
-end-to-end service smoke (ingest, query, snapshot, restore, re-answer), and
-a cluster smoke (primary + 2 WAL-tailing replicas + consistency-aware
-router over one store dir: write, read under every policy, promote).
+end-to-end service smoke (ingest, query, snapshot, restore, re-answer), a
+cluster smoke (primary + 2 WAL-tailing replicas + consistency-aware router
+over one store dir: write, read under every policy, promote), and a sharded
+smoke (4 emulated devices in a subprocess: decompose + fused batch bitwise
+vs the single-device engine and the oracle).
 """
+import os
+import subprocess
 import sys
 import tempfile
 import numpy as np
@@ -160,9 +164,67 @@ def smoke_cluster(n_updates=48, seed=0):
           f"promote exact)")
 
 
+def smoke_sharded(devices=4, seed=0):
+    """Sharded peel substrate: re-exec on ``devices`` emulated host devices
+    and check decompose (every discipline) + a fused batch flush bitwise
+    against the single-device engine and the oracle."""
+    code = f"""
+import sys
+sys.path.insert(0, "src")
+import numpy as np
+from repro.core import DynamicGraph, GraphSpec, from_edge_list, oracle
+from repro.core.graph import pad_state, with_mesh
+from repro.core.peel import peel
+from repro.launch.mesh import make_shard_mesh
+
+rng = np.random.default_rng({seed})
+n = 20
+edges = [(i, j) for i in range(n) for j in range(i + 1, n)
+         if rng.random() < 0.3]
+adj = {{i: set() for i in range(n)}}
+for a, b in edges:
+    adj[a].add(b); adj[b].add(a)
+ref = oracle.truss_decomposition(adj)
+mesh = make_shard_mesh({devices})
+spec0 = GraphSpec(n_nodes=n, d_max=n, e_cap=len(edges))
+spec = with_mesh(spec0, mesh)
+st = pad_state(spec0, from_edge_list(spec0, np.asarray(edges)), spec)
+for method, engine in (("bitmap", "delta"), ("bitmap", "recompute"),
+                       ("sorted", "recompute")):
+    p1, s1 = peel(spec, st, st.active, method=method, engine=engine)
+    p2, s2 = peel(spec, st, st.active, method=method, engine=engine,
+                  mesh=mesh)
+    assert np.array_equal(np.asarray(p1), np.asarray(p2)), (method, engine)
+    got = {{tuple(e): int(p) for e, p in
+           zip(edges, np.asarray(p2)[:len(edges)])}}
+    assert got == ref, (method, engine)
+
+g1 = DynamicGraph(n, edges, support_method="bitmap")
+g2 = DynamicGraph(n, edges, support_method="bitmap", mesh=mesh)
+orc = oracle.Oracle(n, edges)
+present = set(map(tuple, edges))
+ins = sorted((i, j) for i in range(n) for j in range(i + 1, n)
+             if (i, j) not in present)[:10]
+ups = [(1, a, b) for a, b in ins] + [(0, a, b) for a, b in sorted(present)[:4]]
+g1.apply_batch(ups, strategy="fused")
+g2.apply_batch(ups, strategy="fused")
+orc.apply(ups)
+assert g1.phi_dict() == g2.phi_dict() == orc.phi
+print("ok")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    print(f"sharded smoke ok ({devices} devices, decompose + fused batch "
+          f"bitwise vs single-device and oracle)")
+
+
 for s in range(15):
     run_one(s)
     print(f"seed {s} ok")
 smoke_service()
 smoke_cluster()
+smoke_sharded()
 print("ALL OK")

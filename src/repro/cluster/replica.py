@@ -38,13 +38,18 @@ class Replica:
 
     def __init__(self, root: str, replica_id: str = "replica-0", *,
                  flush_every: int = 16, strategy: str = "auto",
-                 indexed: bool = True, support_method: str = "sorted"):
+                 indexed: bool = True, support_method: str = "sorted",
+                 mesh=None):
         self.store = TrussStore(root, readonly=True)
         self.replica_id = replica_id
         # strategy/support_method must match the primary's for bitwise
-        # equality (they select the maintenance path apply_batch runs)
+        # equality (they select the maintenance path apply_batch runs);
+        # mesh need NOT match — the sharded peel is bitwise-equal at any
+        # device count, so a replica may tail a sharded primary from a
+        # single device and vice versa
         self._kw = dict(flush_every=flush_every, strategy=strategy,
-                        indexed=indexed, support_method=support_method)
+                        indexed=indexed, support_method=support_method,
+                        mesh=mesh)
         self.svc: TrussService | None = None
         self._install_snapshot()
         self._publish()

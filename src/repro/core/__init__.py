@@ -2,10 +2,12 @@
 from .graph import (GraphSpec, GraphState, empty_state, from_edge_list,
                     lookup_edge, insert_edge_struct, delete_edge_struct,
                     apply_edge_batch_struct, triangle_partners, support,
-                    support_all, build_bitmap, support_all_bitmap,
-                    update_bitmap)
+                    support_all, build_bitmap, partial_bitmap,
+                    support_all_bitmap, update_bitmap, with_mesh, pad_state,
+                    shard_state)
 from .decomposition import decompose, decompose_and_set
-from .peel import PeelStats, chunk_partners, delta_peel, peel, recompute_peel
+from .peel import (PeelStats, chunk_partners, delta_peel, peel,
+                   recompute_peel, sharded_peel)
 from .maintenance import (insert_edge_maintain, delete_edge_maintain,
                           apply_updates, OP_INSERT, OP_DELETE)
 from .batch import batch_maintain
@@ -18,9 +20,10 @@ __all__ = [
     "GraphSpec", "GraphState", "empty_state", "from_edge_list", "lookup_edge",
     "insert_edge_struct", "delete_edge_struct", "apply_edge_batch_struct",
     "triangle_partners", "support", "support_all", "decompose",
-    "decompose_and_set", "build_bitmap", "support_all_bitmap",
-    "update_bitmap", "PeelStats", "chunk_partners", "delta_peel", "peel",
-    "recompute_peel",
+    "decompose_and_set", "build_bitmap", "partial_bitmap",
+    "support_all_bitmap", "update_bitmap", "with_mesh", "pad_state",
+    "shard_state", "PeelStats", "chunk_partners", "delta_peel", "peel",
+    "recompute_peel", "sharded_peel",
     "insert_edge_maintain", "delete_edge_maintain", "apply_updates",
     "batch_maintain", "OP_INSERT", "OP_DELETE", "TrussIndex",
     "component_labels", "representatives", "representatives_from_labels",

@@ -70,14 +70,15 @@ class _ExpandCarry(NamedTuple):
     it: jax.Array
 
 
-@partial(jax.jit, static_argnames=("spec", "batch", "method", "engine"),
+@partial(jax.jit, static_argnames=("spec", "batch", "method", "engine",
+                                   "mesh"),
          donate_argnames=("st",))
 def batch_maintain(spec: GraphSpec, st: GraphState,
                    del_a, del_b, del_valid,
                    ins_a, ins_b, ins_valid,
                    batch: int = 256, method: str = "sorted",
                    engine: str = "auto",
-                   bitmap: jax.Array | None = None):
+                   bitmap: jax.Array | None = None, mesh=None):
     """Apply B deletions + B insertions jointly and maintain phi exactly.
 
     All arrays are length-B int32/bool (padded, masked).  Deletions and
@@ -85,6 +86,10 @@ def batch_maintain(spec: GraphSpec, st: GraphState,
     netting in ``DynamicGraph.apply_batch`` guarantees this).  ``bitmap``,
     when given (bitmap method), must be the adjacency bitmap of the
     POST-update active set (``DynamicGraph`` maintains it incrementally).
+    ``mesh`` (static, hashable) runs the frozen-boundary re-peel
+    edge-sharded over ``mesh[spec.shard_axis]`` — the structural pass and
+    affected-set closure are O(B·D) one-shot work and stay replicated; the
+    wave loop is where the devices go.
 
     Returns ``(state, lo, hi, stats)`` — the post-update state, the widened
     union affected range (int32 scalars; ``lo > hi`` means nothing beyond
@@ -210,5 +215,5 @@ def batch_maintain(spec: GraphSpec, st: GraphState,
 
     # ---- frozen-boundary re-peel (shared engine, peel.py) ----------------
     phi_final, stats = run_peel(spec, st1, affected, bitmap=bitmap,
-                                method=method, engine=engine)
+                                method=method, engine=engine, mesh=mesh)
     return st1._replace(phi=phi_final), lo, hi, stats

@@ -26,7 +26,7 @@ from .peel import peel as run_peel
 
 def decompose(spec: GraphSpec, st: GraphState, method: str = "sorted",
               engine: str = "auto", chunk: int = 64,
-              bitmap: jax.Array | None = None) -> jax.Array:
+              bitmap: jax.Array | None = None, mesh=None) -> jax.Array:
     """Return phi[E_cap] for the active subgraph of ``st``.
 
     method: 'sorted'  — searchsorted row intersection (sparse-friendly)
@@ -35,12 +35,16 @@ def decompose(spec: GraphSpec, st: GraphState, method: str = "sorted",
     engine: 'auto' | 'delta' | 'recompute' (see ``peel.peel``)
     bitmap: optional cached adjacency bitmap of ``st.active`` (bitmap
             method; skips the up-front O(E) build).
+    mesh:   optional ``Mesh`` — run the peel edge-sharded over
+            ``mesh[spec.shard_axis]`` (bitwise-equal; ``distributed.py``
+            is a host-side convenience façade over this same argument).
     """
     phi, _ = run_peel(spec, st, st.active, bitmap=bitmap,
-                      method=method, engine=engine, chunk=chunk)
+                      method=method, engine=engine, chunk=chunk, mesh=mesh)
     return phi
 
 
 def decompose_and_set(spec: GraphSpec, st: GraphState, method: str = "sorted",
-                      bitmap: jax.Array | None = None) -> GraphState:
-    return st._replace(phi=decompose(spec, st, method, bitmap=bitmap))
+                      bitmap: jax.Array | None = None, mesh=None) -> GraphState:
+    return st._replace(phi=decompose(spec, st, method, bitmap=bitmap,
+                                     mesh=mesh))

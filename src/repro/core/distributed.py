@@ -1,112 +1,79 @@
-"""Distributed truss engine: edge-sharded decomposition via shard_map.
+"""Distributed truss decomposition — a thin façade over the sharded peel
+substrate.
 
-Scheme (DESIGN.md §6): edges are sharded across a data-parallel mesh axis;
-each peel wave
-  1. builds a *partial* adjacency bitmap from the local edge shard,
-  2. psums it into the full bitmap (bits are disjoint per edge, so uint32
-     addition == bitwise-or),
-  3. computes support for local edges against the full bitmap (the Pallas
-     popcount kernel's hot loop),
-  4. strips the local sub-threshold frontier — phi updates stay local.
+Historically this module carried its own mesh decompose loop with private
+``_partial_bitmap``/``_local_support`` re-implementations of the bitmap
+machinery the peel engine already owns.  The mesh is now a property of the
+shared engine itself (``peel.sharded_peel``, reached through
+``peel(mesh=...)`` / ``decompose(mesh=...)``): every path — full decompose,
+the fused batch re-peel, the service flush — runs the same edge-sharded
+wave loop, and this module only keeps the host-side conveniences for
+driving a from-scratch decomposition over a raw edge list:
 
-The collective term is the bitmap psum (N x W u32 per wave).  Beyond-paper
-optimization for §Perf: **delta psum** — wave 0 exchanges the full bitmap,
-later waves exchange only the bits each shard *removed* since its previous
-wave (uint32 subtraction is exact because a shard's current partial bitmap is
-a bitwise subset of its previous one).  Peeling strips a shrinking frontier,
-so per-wave collective bytes collapse from O(N·W) to O(Δ) — XLA further
-shrinks the wire volume only if it can prove sparsity, so we report the
-algorithmic volume in the benchmark harness.
+* ``delta=True``  → ``engine='delta'``: the incremental discipline — wave 0
+  psums the full qualifying bitmap, later waves exchange only the bits each
+  shard cleared (uint32 sums of disjoint-bit partial bitmaps are exact
+  bitwise-ors, so per-wave collective bytes collapse from O(N·W) to O(Δ) —
+  XLA shrinks the wire volume only if it can prove sparsity, so the
+  benchmark harness reports the algorithmic volume).
+* ``delta=False`` → ``engine='recompute'``: the dense baseline — every wave
+  psums partial bitmaps of the whole qualifying set.
 """
 from __future__ import annotations
 
-import jax
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from ..compat import shard_map
-from .graph import GraphSpec
-
-_INF = jnp.int32(2**30)
+from .graph import GraphSpec, GraphState
+from .peel import peel
 
 
-def _partial_bitmap(spec: GraphSpec, edges: jax.Array, alive: jax.Array) -> jax.Array:
-    """Bitmap contribution of a local edge shard."""
-    u = jnp.where(alive, edges[:, 0], spec.n_nodes)
-    v = jnp.where(alive, edges[:, 1], spec.n_nodes)
-    bm = jnp.zeros((spec.n_nodes, spec.n_words), jnp.uint32)
-    one = jnp.uint32(1)
-    for a, bvec in ((u, v), (v, u)):
-        word = (bvec // 32).astype(jnp.int32)
-        bit = (bvec % 32).astype(jnp.uint32)
-        bm = bm.at[a, word].add(jnp.left_shift(one, bit), mode="drop")
-    return bm
-
-
-def _local_support(spec: GraphSpec, bitmap: jax.Array, edges: jax.Array,
-                   alive: jax.Array) -> jax.Array:
-    rows_u = bitmap[jnp.minimum(edges[:, 0], spec.n_nodes - 1)]
-    rows_v = bitmap[jnp.minimum(edges[:, 1], spec.n_nodes - 1)]
-    sup = jnp.sum(jax.lax.population_count(rows_u & rows_v), axis=1).astype(jnp.int32)
-    return jnp.where(alive, sup, 0)
+def _bitmap_state(spec: GraphSpec, edges, active) -> GraphState:
+    """Minimal GraphState for a bitmap-method peel: the bitmap disciplines
+    read only the edge-axis arrays, so the node tables are 1-wide dummies."""
+    n = spec.n_nodes
+    return GraphState(
+        edges=edges, active=active,
+        phi=jnp.zeros((spec.e_cap,), jnp.int32),
+        nbr=jnp.full((n, 1), n, jnp.int32),
+        eid=jnp.full((n, 1), spec.e_cap, jnp.int32),
+        deg=jnp.zeros((n,), jnp.int32))
 
 
 def make_distributed_decompose(spec: GraphSpec, mesh: Mesh,
                                axis: str = "data", delta: bool = False):
-    """Returns a jitted fn (edges [E,2] axis-sharded, active [E]) -> phi [E]."""
-    ax = axis
+    """Returns a fn (edges [E,2] axis-sharded, active [E]) -> phi [E].
 
-    def local_fn(edges, active):
-        def cond(carry):
-            alive, phi, k, bm, part_prev, have_bm = carry
-            return jax.lax.psum(jnp.any(alive).astype(jnp.int32), ax) > 0
+    ``E`` must be a multiple of the mesh axis size (pad with inactive
+    sentinel rows; ``distributed_decompose`` does this for host edge
+    lists).  The body is the shared engine's jitted sharded loop.
+    """
+    s = int(mesh.shape[axis])
 
-        def body(carry):
-            alive, phi, k, bm, part_prev, have_bm = carry
-            part = _partial_bitmap(spec, edges, alive)
-            if delta:
-                bm = jax.lax.cond(
-                    have_bm,
-                    lambda: bm - jax.lax.psum(part_prev - part, ax),
-                    lambda: jax.lax.psum(part, ax))
-            else:
-                bm = jax.lax.psum(part, ax)
-            sup = _local_support(spec, bm, edges, alive)
-            kill = alive & (sup < k - 2)
-            any_kill = jax.lax.psum(jnp.any(kill).astype(jnp.int32), ax) > 0
-            phi = jnp.where(kill, k - 1, phi)
-            alive2 = alive & ~kill
-            min_sup = jax.lax.pmin(jnp.min(jnp.where(alive2, sup, _INF)), ax)
-            k2 = jnp.where(any_kill, k, jnp.maximum(k + 1, min_sup + 3))
-            return alive2, phi, k2, bm, part, jnp.asarray(True)
+    def fn(edges, active):
+        e = int(edges.shape[0])
+        sspec = dataclasses.replace(spec, e_cap=e, n_shards=s, shard_axis=axis)
+        st = _bitmap_state(sspec, edges, active)
+        phi, _ = peel(sspec, st, active, method="bitmap",
+                      engine="delta" if delta else "recompute", mesh=mesh)
+        return phi
 
-        zero_bm = jnp.zeros((spec.n_nodes, spec.n_words), jnp.uint32)
-        alive, phi, _, _, _, _ = jax.lax.while_loop(
-            cond, body,
-            (active, jnp.zeros_like(active, jnp.int32), jnp.int32(3),
-             zero_bm, zero_bm, jnp.asarray(False)))
-        return jnp.where(active, phi, 0)
-
-    mapped = shard_map(local_fn, mesh=mesh,
-                       in_specs=(P(ax, None), P(ax)),
-                       out_specs=P(ax),
-                       check=False)
-    return jax.jit(mapped)
+    return fn
 
 
 def distributed_decompose(spec: GraphSpec, mesh: Mesh, edges_np: np.ndarray,
                           axis: str = "data", delta: bool = False) -> np.ndarray:
     """Host convenience: pad + shard a host edge list, run, return phi [m]."""
     m = len(edges_np)
-    dp = mesh.shape[axis]
+    dp = int(mesh.shape[axis])
     e_pad = -(-m // dp) * dp
     edges = np.full((e_pad, 2), spec.n_nodes, np.int32)
     edges[:m] = edges_np
     active = np.zeros((e_pad,), bool)
     active[:m] = True
     fn = make_distributed_decompose(spec, mesh, axis, delta)
-    edges_d = jax.device_put(jnp.asarray(edges), NamedSharding(mesh, P(axis, None)))
-    active_d = jax.device_put(jnp.asarray(active), NamedSharding(mesh, P(axis)))
-    phi = fn(edges_d, active_d)
+    phi = fn(jnp.asarray(edges), jnp.asarray(active))
     return np.asarray(phi)[:m]

@@ -12,6 +12,13 @@ The maintenance entry points (``insert/delete_edge_maintain``,
 ``batch_maintain``, ``apply_updates``) donate their input GraphState, so a
 flush replaces ``self.state`` in-place at the buffer level — no
 per-generation copy.
+
+``mesh=...`` makes every peel this wrapper launches (the initial
+decomposition, the fused batch re-peel, ``batch_update_then_decompose``)
+run edge-sharded over ``mesh[shard_axis]`` — bitwise-equal to
+``mesh=None``; ``e_cap`` is rounded up so the row blocks stay uniform
+across regrowth.  The progressive single-update paths (Algorithms 1/2)
+run no peel and stay single-device.
 """
 from __future__ import annotations
 
@@ -20,28 +27,40 @@ import jax.numpy as jnp
 
 from . import batch, decomposition, maintenance
 from .graph import (GraphSpec, GraphState, build_bitmap, from_edge_list,
-                    lookup_edge, update_bitmap)
+                    lookup_edge, pad_state, shard_state, update_bitmap,
+                    with_mesh)
 from .index import TrussIndex
 
 
 class DynamicGraph:
     def __init__(self, n_nodes: int, edges=(), d_max: int | None = None,
                  e_cap: int | None = None, support_method: str = "sorted",
-                 tracked_ks: tuple[int, ...] = ()):
+                 tracked_ks: tuple[int, ...] = (), mesh=None,
+                 shard_axis: str = "shard"):
         edges = np.asarray(list(edges), dtype=np.int64).reshape(-1, 2)
         deg = np.bincount(edges.reshape(-1), minlength=n_nodes) if edges.size else np.zeros(n_nodes)
         d_max = int(d_max or max(8, int(deg.max(initial=0)) * 2))
         e_cap = int(e_cap or max(16, len(edges) * 2))
+        self.mesh = mesh
         self.spec = GraphSpec(n_nodes=n_nodes, d_max=d_max, e_cap=e_cap)
+        if mesh is not None:
+            # round e_cap up so edge arrays split into uniform row blocks;
+            # every peel this wrapper launches then shards transparently
+            self.spec = with_mesh(self.spec, mesh, shard_axis)
         self.state = from_edge_list(self.spec, edges) if len(edges) else None
         if self.state is None:
             from .graph import empty_state
             self.state = empty_state(self.spec)
+        if mesh is not None:
+            # place the edge arrays on their shard row blocks up front so
+            # the sharded peels skip the entry reshard
+            self.state = shard_state(self.spec, self.state, mesh)
         self.support_method = support_method
         self._bitmap = None
         self.last_peel_stats = None
         self.state = decomposition.decompose_and_set(
-            self.spec, self.state, support_method, bitmap=self._bitmap_cache())
+            self.spec, self.state, support_method, bitmap=self._bitmap_cache(),
+            mesh=self.mesh)
         self.index = TrussIndex(self.spec, tracked_ks)
         # Host mirror of the present-edge set, kept in sync by every update
         # path so batch netting never forces a device->host transfer.
@@ -50,16 +69,24 @@ class DynamicGraph:
     @classmethod
     def from_state(cls, spec: GraphSpec, state: GraphState,
                    support_method: str = "sorted",
-                   tracked_ks: tuple[int, ...] = ()) -> "DynamicGraph":
+                   tracked_ks: tuple[int, ...] = (),
+                   mesh=None, shard_axis: str = "shard") -> "DynamicGraph":
         """Rebuild a wrapper around already-maintained arrays (checkpoint
-        restore): phi is trusted as-is, no re-decomposition."""
+        restore): phi is trusted as-is, no re-decomposition.  ``mesh``
+        re-shards the restored state onto the mesh (padding the edge axis
+        if the stored capacity doesn't split into uniform row blocks)."""
         g = cls.__new__(cls)
+        g.mesh = mesh
         g.spec = spec
         g.state = GraphState(*(jnp.asarray(x) for x in state))
+        if mesh is not None:
+            g.spec = with_mesh(spec, mesh, shard_axis)
+            g.state = shard_state(g.spec, pad_state(spec, g.state, g.spec),
+                                  mesh)
         g.support_method = support_method
         g._bitmap = None
         g.last_peel_stats = None
-        g.index = TrussIndex(spec, tracked_ks)
+        g.index = TrussIndex(g.spec, tracked_ks)
         act = np.asarray(g.state.active)
         edges = np.asarray(g.state.edges)[act]
         g._present = {(int(min(u, v)), int(max(u, v))) for u, v in edges}
@@ -111,10 +138,13 @@ class DynamicGraph:
         if extra_edge is not None:
             deg[extra_edge[0]] += 1
             deg[extra_edge[1]] += 1
+        s = self.spec.n_shards
+        new_e = max(self.spec.e_cap * 2, len(el) + 16, min_e + 16)
         new_spec = GraphSpec(
             n_nodes=self.spec.n_nodes,
             d_max=max(self.spec.d_max * 2, int(deg.max(initial=0)) + 4, min_d + 4),
-            e_cap=max(self.spec.e_cap * 2, len(el) + 16, min_e + 16),
+            e_cap=-(-new_e // s) * s,  # keep the shard row blocks uniform
+            n_shards=s, shard_axis=self.spec.shard_axis,
         )
         phi_old = self.phi_dict()
         self.spec = new_spec
@@ -127,6 +157,8 @@ class DynamicGraph:
         for i, (u, v) in enumerate(el):
             phi[i] = phi_old[(u, v)]
         self.state = self.state._replace(phi=jnp.asarray(phi))
+        if self.mesh is not None:
+            self.state = shard_state(self.spec, self.state, self.mesh)
         self._bitmap = None  # shape depends only on n_nodes, but rebuild anyway
         self.index = TrussIndex(new_spec, self.index.tracked)
         self.index.invalidate_all()
@@ -249,7 +281,8 @@ class DynamicGraph:
         try:
             self.state, _lo, hi, stats = batch.batch_maintain(
                 self.spec, self.state, da, db, dm, ia, ib, im,
-                method=self.support_method, bitmap=self._bitmap)
+                method=self.support_method, bitmap=self._bitmap,
+                mesh=self.mesh)
         except BaseException:
             # the cache already describes the post-update edge set but
             # state/_present still the pre-update one — drop it rather than
@@ -276,14 +309,18 @@ class DynamicGraph:
         el = sorted(el)
         deg = np.bincount(np.asarray(el).reshape(-1), minlength=self.spec.n_nodes) if el else np.zeros(self.spec.n_nodes)
         if len(el) > self.spec.e_cap or deg.max(initial=0) > self.spec.d_max:
+            s = self.spec.n_shards
             self.spec = GraphSpec(self.spec.n_nodes,
                                   max(self.spec.d_max, int(deg.max(initial=0)) + 4),
-                                  max(self.spec.e_cap, len(el) + 16))
+                                  -(-max(self.spec.e_cap, len(el) + 16) // s) * s,
+                                  n_shards=s, shard_axis=self.spec.shard_axis)
         self.state = from_edge_list(self.spec, np.asarray(el).reshape(-1, 2))
+        if self.mesh is not None:
+            self.state = shard_state(self.spec, self.state, self.mesh)
         self._bitmap = None  # wholesale structural rebuild: cache is stale
         self.state = decomposition.decompose_and_set(
             self.spec, self.state, self.support_method,
-            bitmap=self._bitmap_cache())
+            bitmap=self._bitmap_cache(), mesh=self.mesh)
         self.index = TrussIndex(self.spec, self.index.tracked)
         self.index.invalidate_all()
 

@@ -29,11 +29,30 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class GraphSpec:
-    """Static (hashable — usable as a jit static arg) graph capacities."""
+    """Static (hashable — usable as a jit static arg) graph capacities.
+
+    ``n_shards``/``shard_axis`` declare the optional mesh partition geometry
+    of the edge axis: every edge-indexed array (``edges``, ``active``,
+    ``phi``) is row-blocked into ``n_shards`` contiguous blocks of
+    ``block`` slots, block *s* owned by mesh position *s* along
+    ``shard_axis``.  Node-indexed arrays (``nbr``/``eid``/``deg``, the
+    adjacency bitmap) stay replicated.  ``n_shards == 1`` (the default) is
+    the single-device layout; the spec stays hashable and the devices
+    themselves never enter it — the ``Mesh`` is supplied at call time and
+    validated against this geometry.
+    """
 
     n_nodes: int
     d_max: int
     e_cap: int
+    n_shards: int = 1
+    shard_axis: str = "shard"
+
+    def __post_init__(self):
+        if self.e_cap % self.n_shards:
+            raise ValueError(
+                f"e_cap {self.e_cap} must divide into n_shards "
+                f"{self.n_shards} row blocks (see with_mesh)")
 
     @property
     def n_words(self) -> int:
@@ -115,6 +134,59 @@ def from_edge_list(spec: GraphSpec, edge_list: np.ndarray) -> GraphState:
         eid=jnp.asarray(eid),
         deg=jnp.asarray(deg),
     )
+
+
+# ---------------------------------------------------------------------------
+# Sharded-state constructors — the mesh-partitioned layout of the peel
+# substrate.  Edge-indexed arrays are row-blocked over spec.shard_axis,
+# node-indexed arrays replicated; mesh=None consumers ignore all of this.
+# ---------------------------------------------------------------------------
+
+def with_mesh(spec: GraphSpec, mesh, axis: str = "shard") -> GraphSpec:
+    """Spec with the partition geometry of ``mesh[axis]``: ``e_cap`` rounded
+    up to a multiple of the axis size so the edge row blocks are uniform."""
+    s = int(mesh.shape[axis])
+    e_cap = -(-spec.e_cap // s) * s
+    return dataclasses.replace(spec, e_cap=e_cap, n_shards=s, shard_axis=axis)
+
+
+def pad_state(old_spec: GraphSpec, st: GraphState, spec: GraphSpec) -> GraphState:
+    """Grow the edge axis of ``st`` from ``old_spec.e_cap`` to
+    ``spec.e_cap`` with sentinel slots (used when re-sharding restored or
+    host-built state onto a mesh whose block size doesn't divide the old
+    capacity).  The ``eid`` sentinel is the *value* ``e_cap`` ("no edge"),
+    so every old-sentinel entry is remapped to the new capacity."""
+    extra = spec.e_cap - old_spec.e_cap
+    if extra < 0:
+        raise ValueError(f"cannot shrink e_cap {old_spec.e_cap} -> {spec.e_cap}")
+    eid = jnp.where(st.eid == old_spec.e_cap, spec.e_cap, st.eid)
+    if extra == 0:
+        return st._replace(eid=eid)
+    return GraphState(
+        edges=jnp.concatenate(
+            [st.edges, jnp.full((extra, 2), spec.n_nodes, jnp.int32)]),
+        active=jnp.concatenate([st.active, jnp.zeros((extra,), bool)]),
+        phi=jnp.concatenate([st.phi, jnp.zeros((extra,), jnp.int32)]),
+        nbr=st.nbr, eid=eid, deg=st.deg)
+
+
+def shard_state(spec: GraphSpec, st: GraphState, mesh) -> GraphState:
+    """Place ``st`` for the mesh: edge-axis arrays sharded into their row
+    blocks along ``spec.shard_axis``, node-indexed arrays replicated.  The
+    placement is an optimization (shard_map reshards on entry regardless);
+    values are unchanged."""
+    from jax.sharding import NamedSharding, PartitionSpec as P  # lazy: host paths
+    ax = spec.shard_axis
+    row2 = NamedSharding(mesh, P(ax, None))
+    row1 = NamedSharding(mesh, P(ax))
+    rep = NamedSharding(mesh, P())
+    return GraphState(
+        edges=jax.device_put(st.edges, row2),
+        active=jax.device_put(st.active, row1),
+        phi=jax.device_put(st.phi, row1),
+        nbr=jax.device_put(st.nbr, rep),
+        eid=jax.device_put(st.eid, rep),
+        deg=jax.device_put(st.deg, rep))
 
 
 # ---------------------------------------------------------------------------
@@ -333,15 +405,20 @@ def support_all(spec: GraphSpec, st: GraphState, alive: jax.Array) -> jax.Array:
 # Adjacency bitmaps — TPU-native intersection via AND + popcount (DESIGN §2).
 # ---------------------------------------------------------------------------
 
-def build_bitmap(spec: GraphSpec, st: GraphState, alive: jax.Array) -> jax.Array:
-    """uint32[N, W] adjacency bitmap of the alive subgraph.
+def partial_bitmap(spec: GraphSpec, edges: jax.Array, valid: jax.Array) -> jax.Array:
+    """uint32[N, W] bitmap contribution of an edge subset ([B, 2], masked).
 
-    Each alive edge contributes one distinct bit per direction, so scatter-add
-    equals scatter-or (simple graph ⇒ no duplicate bits).
+    Each valid edge contributes one distinct bit per direction, so
+    scatter-add equals scatter-or (simple graph ⇒ no duplicate bits) — and,
+    because disjoint edge sets own disjoint bits, **summing** the partial
+    bitmaps of the per-shard edge blocks rebuilds the full bitmap
+    (``psum`` == bitwise-or across a mesh) and uint32 subtraction of a
+    partial bitmap clears exactly that subset's bits with no borrow.  This
+    is the one bitmap-construction primitive behind ``build_bitmap`` and
+    the sharded peel engine's per-wave delta exchange.
     """
-    u, v = st.edges[:, 0], st.edges[:, 1]
-    u = jnp.where(alive, u, spec.n_nodes)  # OOB rows are dropped
-    v = jnp.where(alive, v, spec.n_nodes)
+    u = jnp.where(valid, edges[:, 0], spec.n_nodes)  # OOB rows are dropped
+    v = jnp.where(valid, edges[:, 1], spec.n_nodes)
     bm = jnp.zeros((spec.n_nodes, spec.n_words), dtype=jnp.uint32)
     one = jnp.uint32(1)
 
@@ -354,6 +431,11 @@ def build_bitmap(spec: GraphSpec, st: GraphState, alive: jax.Array) -> jax.Array
     bm = scatter_dir(bm, u, v)
     bm = scatter_dir(bm, v, u)
     return bm
+
+
+def build_bitmap(spec: GraphSpec, st: GraphState, alive: jax.Array) -> jax.Array:
+    """uint32[N, W] adjacency bitmap of the alive subgraph."""
+    return partial_bitmap(spec, st.edges, alive)
 
 
 def update_bitmap(spec: GraphSpec, bm: jax.Array, u: jax.Array, v: jax.Array,

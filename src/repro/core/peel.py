@@ -44,6 +44,23 @@ whenever the bitmap fits (dense or mid-sized N, and on TPU where the
 fused VMEM pass replaces gather-heavy searchsorted), especially with a
 cached structural bitmap (``DynamicGraph``) making even the up-front pass
 gather-only.
+
+**Mesh partitioning.**  Every discipline above also runs edge-sharded under
+a ``Mesh`` (``peel(..., mesh=...)``): edge-indexed arrays are row-blocked
+along ``spec.shard_axis`` (``GraphSpec.n_shards`` blocks), each shard runs
+the identical wave arithmetic on its block — per-shard AND+popcount support
+through the same fused kernel, per-shard kill-frontier emission — and the
+waves stay in lockstep through exactly **one all-reduce per wave for the
+global frontier/threshold decision** (a packed 4-lane ``pmin`` carrying
+min-support, min-frozen-phi, any-dead and any-work; the loop condition
+reads the reduced flag, so ``cond`` itself is collective-free).  The bitmap
+disciplines additionally exchange bitmap data: the delta engine psums only
+the bits each shard *cleared* this wave (uint32 sums of disjoint-bit
+partial bitmaps are exact bitwise-ors), the recompute engine psums partial
+bitmaps of the full qualifying set.  All reductions are integer min/sum of
+the same values the single-device loop computes, so the sharded engine is
+**bitwise-equal** to ``mesh=None`` at every device count — enforced by
+``tests/test_sharded.py``.
 """
 from __future__ import annotations
 
@@ -53,8 +70,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .graph import (GraphSpec, GraphState, build_bitmap, support_all,
-                    support_all_bitmap, triangle_partners, update_bitmap)
+from .graph import (GraphSpec, GraphState, build_bitmap, partial_bitmap,
+                    support, support_all, support_all_bitmap,
+                    triangle_partners, update_bitmap)
 
 _INF = jnp.int32(2**30)
 
@@ -135,7 +153,7 @@ class _Carry(NamedTuple):
 
 def peel(spec: GraphSpec, st: GraphState, peel_mask: jax.Array,
          bitmap: jax.Array | None = None, method: str = "sorted",
-         engine: str = "auto", chunk: int = 64):
+         engine: str = "auto", chunk: int = 64, mesh=None):
     """The one peel entry point every consumer routes through.
 
     ``engine='auto'`` picks the measured-faster wave discipline per method:
@@ -144,9 +162,17 @@ def peel(spec: GraphSpec, st: GraphState, peel_mask: jax.Array,
     dense [E, D] searchsorted wave outruns sparse compaction/scatter on
     today's backends; the delta discipline stays selectable and is where
     the asymptotics point as E grows).  Returns ``(phi, PeelStats)``.
+
+    ``mesh``: optional ``jax.sharding.Mesh`` — run the same wave discipline
+    edge-sharded over ``mesh[spec.shard_axis]`` (bitwise-equal to
+    ``mesh=None``; see the module docstring).  ``mesh=None`` is exactly the
+    single-device engine.
     """
     if engine == "auto":
         engine = "delta" if method == "bitmap" else "recompute"
+    if mesh is not None:
+        return sharded_peel(spec, st, peel_mask, bitmap=bitmap, method=method,
+                            engine=engine, mesh=mesh)
     if engine == "delta":
         return delta_peel(spec, st, peel_mask, bitmap=bitmap, method=method,
                           chunk=chunk)
@@ -373,3 +399,213 @@ def _peel_sorted(spec, st, peel, frozen, fphi, alive0, chunk):
     out = jax.lax.while_loop(cond, body, init)
     return (jnp.where(st.active, out.phi, 0),
             PeelStats(out.waves, out.kills, out.deltas))
+
+
+# ---------------------------------------------------------------------------
+# mesh-partitioned engine — the same wave disciplines, edge-sharded
+# ---------------------------------------------------------------------------
+
+class _ShardCarry(NamedTuple):
+    alive: jax.Array   # bool[block] — local rows of the qualifying subgraph
+    phi: jax.Array     # int32[block]
+    sup: jax.Array     # int32[block]
+    bm: jax.Array      # uint32[N, W] replicated qual bitmap (else [1, 1])
+    k: jax.Array
+    waves: jax.Array
+    kills: jax.Array   # local kill count (psum'd on exit)
+    deltas: jax.Array
+    go: jax.Array      # bool — global any-work flag from the decision pmin
+
+
+def _decision(min_sup_l, min_frz_l, any_dead_l, any_work_l, ax):
+    """THE one all-reduce per wave: a packed 4-lane pmin carrying the
+    global min peelable support, min frozen phi, any-dead and any-work
+    flags (encoded 0 = true so min == logical any).  Returns
+    ``(min_sup, min_frz, any_dead, go)``; the loop condition reads ``go``
+    from the carry, so ``cond`` needs no collective of its own."""
+    packed = jnp.stack([min_sup_l, min_frz_l,
+                        1 - any_dead_l.astype(jnp.int32),
+                        1 - any_work_l.astype(jnp.int32)])
+    packed = jax.lax.pmin(packed, ax)
+    return packed[0], packed[1], packed[2] == 0, packed[3] == 0
+
+
+def sharded_peel(spec: GraphSpec, st: GraphState, peel_mask: jax.Array,
+                 bitmap: jax.Array | None = None, method: str = "bitmap",
+                 engine: str = "delta", mesh=None):
+    """Mesh-partitioned ``peel``: same contract, same bits, many devices.
+
+    Edge-indexed arrays enter sharded over ``mesh[spec.shard_axis]`` (one
+    row block per shard, ``shard_state``); node-indexed tables and the
+    adjacency bitmap are replicated.  Per wave each shard computes support
+    and the kill frontier for its own block only; cross-shard coupling is
+    the decision pmin plus, for the bitmap methods, a psum of disjoint-bit
+    partial bitmaps (delta: cleared bits only; recompute: the full
+    qualifying set) and, for sorted recompute, an all-gather of the local
+    qualifying masks.  Wave-by-wave arithmetic is identical to the
+    single-device loops, so phi and PeelStats are bitwise-equal.
+    """
+    if mesh is None:
+        raise ValueError("sharded_peel requires a mesh (use peel otherwise)")
+    if int(mesh.shape[spec.shard_axis]) != spec.n_shards:
+        raise ValueError(
+            f"mesh axis {spec.shard_axis!r} has "
+            f"{int(mesh.shape[spec.shard_axis])} devices but spec declares "
+            f"{spec.n_shards} shards (build the spec with graph.with_mesh)")
+    if engine == "delta":
+        if method != "bitmap":
+            raise ValueError(
+                "the sorted delta discipline is not mesh-partitioned (its "
+                "chunk-admission order is global); use engine='recompute' "
+                "or method='bitmap'")
+        has_bitmap = bitmap is not None
+        if bitmap is None:
+            bitmap = jnp.zeros((1, 1), jnp.uint32)  # placeholder, rebuilt inside
+        phi, waves, kills, deltas = _sharded_delta_bitmap(
+            spec, st.edges, st.active, st.phi, peel_mask, bitmap,
+            mesh=mesh, has_bitmap=has_bitmap)
+        return phi, PeelStats(waves, kills, deltas)
+    if engine != "recompute":
+        raise ValueError(f"unknown engine {engine!r}")
+    phi, waves, kills = _sharded_recompute(
+        spec, st.edges, st.active, st.phi, peel_mask, st.nbr, st.eid,
+        mesh=mesh, method=method)
+    return phi, PeelStats(waves, kills, jnp.int32(0))
+
+
+@partial(jax.jit, static_argnames=("spec", "mesh", "has_bitmap"))
+def _sharded_delta_bitmap(spec: GraphSpec, edges, active, phi0, peel_mask,
+                          bitmap, *, mesh, has_bitmap):
+    """Edge-sharded twin of ``_peel_bitmap``: incremental bit-clearing with
+    the cleared bits psum'd across shards each wave (uint32 sums of
+    disjoint-bit partials are exact bitwise-ors/clears), the fused
+    ``peel_wave`` kernel running unchanged on each shard's row block."""
+    from jax.sharding import PartitionSpec as P
+    from ..compat import shard_map
+    from ..kernels import ops as kernel_ops  # kernels never import core
+
+    e_cap, n, ax = spec.e_cap, spec.n_nodes, spec.shard_axis
+
+    def local_fn(edges, active, phi0, peelm, bitmap):
+        peelm = peelm & active
+        frozen = active & ~peelm
+        fphi = phi0
+        alive0 = peelm | (frozen & (fphi >= 3))
+        if has_bitmap:
+            # the provided bitmap covers st.active: clear the bits of edges
+            # outside the initial qualifying set (frozen with phi < 3)
+            bm0 = bitmap - jax.lax.psum(
+                partial_bitmap(spec, edges, active & ~alive0), ax)
+        else:
+            bm0 = jax.lax.psum(partial_bitmap(spec, edges, alive0), ax)
+        eu = jnp.minimum(edges[:, 0], n - 1)
+        ev = jnp.minimum(edges[:, 1], n - 1)
+        go0 = jax.lax.pmin(
+            1 - jnp.any(peelm).astype(jnp.int32), ax) == 0
+
+        def cond(c: _ShardCarry):
+            return c.go & (c.waves < 8 * e_cap)
+
+        def body(c: _ShardCarry):
+            # the fused kernel on this shard's row block only
+            sup, kill = kernel_ops.peel_wave(c.bm[eu], c.bm[ev],
+                                             c.alive & peelm, c.k)
+            retire = c.alive & frozen & (fphi < c.k)
+            dead = kill | retire
+            phi = jnp.where(kill, c.k - 1, c.phi)
+            alive = c.alive & ~dead
+            # data exchange: only the bits this wave cleared cross the wire
+            bm = c.bm - jax.lax.psum(partial_bitmap(spec, edges, dead), ax)
+
+            min_sup, min_frz, any_dead, go = _decision(
+                jnp.min(jnp.where(alive & peelm, sup, _INF)),
+                jnp.min(jnp.where(alive & frozen, fphi, _INF)),
+                jnp.any(dead), jnp.any(alive & peelm), ax)
+            k_next = jnp.maximum(c.k + 1, jnp.minimum(min_sup + 3, min_frz + 1))
+            k = jnp.where(any_dead, c.k, k_next)
+            return _ShardCarry(alive, phi, sup, bm, k, c.waves + 1,
+                               c.kills + jnp.sum(kill, dtype=jnp.int32),
+                               c.deltas + 2 * jnp.sum(dead, dtype=jnp.int32),
+                               go)
+
+        init = _ShardCarry(alive0, phi0, jnp.zeros_like(phi0), bm0,
+                           jnp.int32(3), jnp.int32(0), jnp.int32(0),
+                           jnp.int32(0), go0)
+        out = jax.lax.while_loop(cond, body, init)
+        return (jnp.where(active, out.phi, 0), out.waves,
+                jax.lax.psum(out.kills, ax), jax.lax.psum(out.deltas, ax))
+
+    mapped = shard_map(local_fn, mesh=mesh,
+                       in_specs=(P(ax, None), P(ax), P(ax), P(ax), P()),
+                       out_specs=(P(ax), P(), P(), P()),
+                       check=False)
+    return mapped(edges, active, phi0, peel_mask, bitmap)
+
+
+@partial(jax.jit, static_argnames=("spec", "mesh", "method"))
+def _sharded_recompute(spec: GraphSpec, edges, active, phi0, peel_mask,
+                       nbr, eid, *, mesh, method):
+    """Edge-sharded twin of ``recompute_peel``: each wave recomputes the
+    support of this shard's row block against the full qualifying subgraph
+    — psum'd partial bitmaps (``bitmap``) or replicated adjacency rows
+    against the all-gathered qualifying mask (``sorted``)."""
+    from jax.sharding import PartitionSpec as P
+    from ..compat import shard_map
+    from ..kernels import ops as kernel_ops  # kernels never import core
+
+    e_cap, n, ax = spec.e_cap, spec.n_nodes, spec.shard_axis
+    if method not in ("sorted", "bitmap"):
+        raise ValueError(f"unknown method {method!r}")
+
+    def local_fn(edges, active, phi0, peelm, nbr, eid):
+        peelm = peelm & active
+        frozen = active & ~peelm
+        fphi = phi0
+        eu = jnp.minimum(edges[:, 0], n - 1)
+        ev = jnp.minimum(edges[:, 1], n - 1)
+        # node tables are replicated; triangle_partners/support only touch
+        # nbr/eid, so the edge-axis fields can stay local-block sized
+        nst = GraphState(edges=edges, active=active, phi=phi0,
+                         nbr=nbr, eid=eid, deg=jnp.zeros((n,), jnp.int32))
+
+        def sup_of(qual_l):
+            if method == "bitmap":
+                bm = jax.lax.psum(partial_bitmap(spec, edges, qual_l), ax)
+                return jnp.where(qual_l, kernel_ops.bitmap_support(
+                    bm[eu], bm[ev]), 0)
+            qual_g = jax.lax.all_gather(qual_l, ax, tiled=True)
+            return jnp.where(qual_l, support(spec, nst, eu, ev,
+                                             alive=qual_g), 0)
+
+        go0 = jax.lax.pmin(1 - jnp.any(peelm).astype(jnp.int32), ax) == 0
+
+        def cond(carry):
+            alive, phi, k, waves, kills, go = carry
+            return go & (waves < 8 * e_cap)
+
+        def body(carry):
+            alive, phi, k, waves, kills, go = carry
+            qual = alive | (frozen & (fphi >= k))
+            sup = sup_of(qual)
+            kill = alive & (sup < k - 2)
+            phi = jnp.where(kill, k - 1, phi)
+            alive = alive & ~kill
+            min_sup, j2m, any_kill, go = _decision(
+                jnp.min(jnp.where(alive, sup, _INF)),
+                jnp.min(jnp.where(frozen & (fphi >= k), fphi, _INF)),
+                jnp.any(kill), jnp.any(alive), ax)
+            # level fixpoint -> jump k past dead levels (see recompute_peel)
+            k_jump = jnp.maximum(jnp.minimum(min_sup + 3, j2m + 1), k + 1)
+            k = jnp.where(any_kill, k, k_jump)
+            return (alive, phi, k, waves + 1,
+                    kills + jnp.sum(kill, dtype=jnp.int32), go)
+
+        init = (peelm, phi0, jnp.int32(3), jnp.int32(0), jnp.int32(0), go0)
+        alive, phi, _, waves, kills, _ = jax.lax.while_loop(cond, body, init)
+        return (jnp.where(active, phi, 0), waves, jax.lax.psum(kills, ax))
+
+    mapped = shard_map(local_fn, mesh=mesh,
+                       in_specs=(P(ax, None), P(ax), P(ax), P(ax), P(), P()),
+                       out_specs=(P(ax), P(), P()),
+                       check=False)
+    return mapped(edges, active, phi0, peel_mask, nbr, eid)

@@ -35,12 +35,24 @@ def _kernel(a_ref, b_ref, o_ref):
     o_ref[...] += jnp.sum(inter.astype(jnp.int32), axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "edge_block", "word_block"))
+@functools.partial(jax.jit, static_argnames=("interpret", "edge_block",
+                                             "word_block", "row_count"))
 def bitmap_support_kernel(rows_a: jax.Array, rows_b: jax.Array, *,
                           interpret: bool = False,
                           edge_block: int = EDGE_BLOCK,
-                          word_block: int = WORD_BLOCK) -> jax.Array:
-    """sup[i] = popcount(rows_a[i] & rows_b[i]).sum() for uint32 rows [E, W]."""
+                          word_block: int = WORD_BLOCK,
+                          row_offset=0, row_count: int | None = None) -> jax.Array:
+    """sup[i] = popcount(rows_a[i] & rows_b[i]).sum() for uint32 rows [E, W].
+
+    ``row_offset``/``row_count`` select one row block out of larger inputs
+    (the mesh-sharded peel substrate's row-block addressing; see
+    ``peel_wave_kernel``): the kernel runs unchanged over rows
+    ``[row_offset, row_offset + row_count)`` and returns
+    ``sup int32[row_count]``.
+    """
+    if row_count is not None:
+        rows_a = jax.lax.dynamic_slice_in_dim(rows_a, row_offset, row_count)
+        rows_b = jax.lax.dynamic_slice_in_dim(rows_b, row_offset, row_count)
     e, w = rows_a.shape
     eb = min(edge_block, max(8, e))
     wb = min(word_block, max(1, w))

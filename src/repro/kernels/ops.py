@@ -28,20 +28,41 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def bitmap_support(rows_a, rows_b):
+def _slab(row_offset, row_count, *arrays):
+    """Row-block slab selection shared by every bitmap-row entry point.
+
+    The mesh-sharded peel substrate addresses the edge axis as contiguous
+    row blocks; under ``shard_map`` each shard already holds its block, so
+    the engine's per-shard calls pass whole (local) arrays.  (offset,
+    count) serve callers that hold the *full* arrays and want one block —
+    row-blocked single-device execution, and the block-equivalence tests
+    (``tests/test_sharded.py``) that pin down the property the per-shard
+    calls rely on: a kernel call on a slab == the corresponding slice of
+    the full-array call, bitwise."""
+    if row_count is None:
+        return arrays
+    return tuple(jax.lax.dynamic_slice_in_dim(a, row_offset, row_count)
+                 for a in arrays)
+
+
+def bitmap_support(rows_a, rows_b, row_offset=0, row_count=None):
     if not _USE_KERNELS:
+        rows_a, rows_b = _slab(row_offset, row_count, rows_a, rows_b)
         return ref.bitmap_support_ref(rows_a, rows_b)
-    return bitmap_support_kernel(rows_a, rows_b, interpret=_interpret())
+    return bitmap_support_kernel(rows_a, rows_b, interpret=_interpret(),
+                                 row_offset=row_offset, row_count=row_count)
 
 
-def peel_wave(rows_a, rows_b, alive, k):
+def peel_wave(rows_a, rows_b, alive, k, row_offset=0, row_count=None):
     # Unlike the other wrappers, this one only runs the Pallas body on real
     # TPU hardware: it sits inside the peel engine's while_loop (one call
     # per wave), where interpret-mode emulation costs ~40x over the fused
     # XLA reference.  The kernel body itself is still validated in
     # interpret mode by tests/test_peel_engine.py.
     if _USE_KERNELS and jax.default_backend() == "tpu":
-        return peel_wave_kernel(rows_a, rows_b, alive, k)
+        return peel_wave_kernel(rows_a, rows_b, alive, k,
+                                row_offset=row_offset, row_count=row_count)
+    rows_a, rows_b, alive = _slab(row_offset, row_count, rows_a, rows_b, alive)
     return ref.peel_wave_ref(rows_a, rows_b, alive, k)
 
 

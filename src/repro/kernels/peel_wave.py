@@ -45,16 +45,33 @@ def _kernel(k_ref, a_ref, b_ref, alive_ref, sup_ref, kill_ref):
         kill_ref[...] = (alive & (sup < k_ref[0, 0] - 2)).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "edge_block", "word_block"))
+@functools.partial(jax.jit, static_argnames=("interpret", "edge_block",
+                                             "word_block", "row_count"))
 def peel_wave_kernel(rows_a: jax.Array, rows_b: jax.Array, alive: jax.Array,
                      k: jax.Array, *, interpret: bool = False,
                      edge_block: int = EDGE_BLOCK,
-                     word_block: int = WORD_BLOCK):
+                     word_block: int = WORD_BLOCK,
+                     row_offset=0, row_count: int | None = None):
     """Fused (support, kill-frontier) for uint32 bitmap rows [E, W].
 
     Returns ``(sup int32[E], kill bool[E])`` with sup masked to 0 and kill
     to False outside ``alive``.
+
+    ``row_offset``/``row_count`` select one row block out of larger inputs
+    (the mesh-sharded peel substrate's row-block addressing): the same
+    kernel body then runs unchanged over rows
+    ``[row_offset, row_offset + row_count)`` and the outputs cover only
+    that block.  Concatenating the per-block outputs over a partition of
+    the edge axis is bitwise-equal to the full-array call
+    (``tests/test_sharded.py``) — the property that makes the sharded
+    engine's per-shard calls exact; under ``shard_map`` the shard already
+    holds its block, so those calls pass whole local arrays and the slab
+    path serves full-array callers.
     """
+    if row_count is not None:
+        rows_a = jax.lax.dynamic_slice_in_dim(rows_a, row_offset, row_count)
+        rows_b = jax.lax.dynamic_slice_in_dim(rows_b, row_offset, row_count)
+        alive = jax.lax.dynamic_slice_in_dim(alive, row_offset, row_count)
     e, w = rows_a.shape
     eb = min(edge_block, max(8, e))
     wb = min(word_block, max(1, w))

@@ -29,6 +29,20 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
     return Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)
 
 
+def make_shard_mesh(n_shards: int | None = None, axis: str = "shard") -> Mesh:
+    """1-D mesh for the sharded peel substrate (``GraphSpec.shard_axis``).
+
+    ``n_shards=None`` takes every visible device — the usual way to turn a
+    ``--xla_force_host_platform_device_count=N`` run (or a TPU slice) into
+    a truss engine mesh.
+    """
+    devices = jax.devices()
+    n = len(devices) if n_shards is None else int(n_shards)
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, found {len(devices)}")
+    return Mesh(np.asarray(devices[:n]), (axis,))
+
+
 def dp_axes(mesh: Mesh):
     """The combined pure-data-parallel axes of a mesh."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

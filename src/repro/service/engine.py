@@ -57,14 +57,17 @@ class TrussService:
                  flush_every: int = 16, strategy: str = "auto",
                  store: TrussStore | None = None, indexed: bool = True,
                  d_max: int | None = None, e_cap: int | None = None,
-                 support_method: str = "sorted"):
+                 support_method: str = "sorted", mesh=None):
         if store is not None and (store.wal_len
                                   or os.path.exists(store.snap_path)):
             raise ValueError(
                 "store already holds state — use TrussService.restore(store)")
+        # mesh: every flush's fused re-peel shards over the mesh; snapshots
+        # record the (mesh-padded) capacities only, so replicas/restores on
+        # any device count stay bitwise-equal to this primary
         self.graph = DynamicGraph(n_nodes, edges, d_max=d_max, e_cap=e_cap,
                                   support_method=support_method,
-                                  tracked_ks=tuple(tracked_ks))
+                                  tracked_ks=tuple(tracked_ks), mesh=mesh)
         self.store = store
         self.flush_every = int(flush_every)
         self.strategy = strategy
@@ -281,7 +284,8 @@ class TrussService:
     def _from_snapshot_tree(cls, tree: dict, *, store: TrussStore | None,
                             flush_every: int = 16, strategy: str = "auto",
                             indexed: bool = True,
-                            support_method: str = "sorted") -> "TrussService":
+                            support_method: str = "sorted",
+                            mesh=None) -> "TrussService":
         """Rebuild a service around a snapshot tree — no WAL replay.  Shared
         by ``restore`` and the cluster ``Replica`` (which bootstraps with
         ``store=None`` and tails the primary's WAL itself)."""
@@ -290,7 +294,7 @@ class TrussService:
         svc = cls.__new__(cls)
         svc.graph = DynamicGraph.from_state(
             GraphSpec(n, d, e), state, support_method,
-            tuple(int(k) for k in tree["tracked"]))
+            tuple(int(k) for k in tree["tracked"]), mesh=mesh)
         svc.store = store
         svc.flush_every = int(flush_every)
         svc.strategy = strategy
@@ -305,7 +309,7 @@ class TrussService:
     @classmethod
     def restore(cls, store: TrussStore, *, flush_every: int = 16,
                 strategy: str = "auto", indexed: bool = True,
-                support_method: str = "sorted") -> "TrussService":
+                support_method: str = "sorted", mesh=None) -> "TrussService":
         """Last snapshot + WAL-tail replay => the exact pre-crash oracle."""
         tree = store.load_snapshot()
         if tree is None:
@@ -313,7 +317,8 @@ class TrussService:
         svc = cls._from_snapshot_tree(tree, store=store,
                                       flush_every=flush_every,
                                       strategy=strategy, indexed=indexed,
-                                      support_method=support_method)
+                                      support_method=support_method,
+                                      mesh=mesh)
         svc._replay(store.read_wal(start=svc._applied_wal))
         store.publish_commit(svc.gen, svc._applied_wal)
         return svc

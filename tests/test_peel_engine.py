@@ -110,6 +110,66 @@ def test_delta_peel_cached_bitmap_matches_engine_built():
         np.asarray(bm), np.asarray(build_bitmap(SPEC, st, st.active)))
 
 
+def test_capacity_regrowth_invalidates_cached_bitmap():
+    """Regression (ISSUE-5): a ``d_max``/``e_cap`` regrowth (``_grow``)
+    must rebuild or invalidate the cached structural bitmap before the next
+    maintenance call — on both the progressive insert path and the fused
+    ``apply_batch`` path — so phi and bitmap-derived support never read a
+    pre-growth cache."""
+    from repro.core import support_all, support_all_bitmap
+
+    def check_cache(g):
+        bm_ref = build_bitmap(g.spec, g.state, g.state.active)
+        np.testing.assert_array_equal(np.asarray(g._bitmap), np.asarray(bm_ref))
+        sup_bm = support_all_bitmap(g.spec, g.state, g.state.active,
+                                    bitmap=g._bitmap)
+        sup_ref = support_all(g.spec, g.state, g.state.active)
+        np.testing.assert_array_equal(np.asarray(sup_bm), np.asarray(sup_ref))
+
+    # progressive inserts past both capacities (d_max=4, e_cap=6), with a
+    # warm cache from a prior fused batch
+    n = 10
+    base = [(0, 1), (0, 2), (1, 2), (2, 3)]
+    g = DynamicGraph(n, base, d_max=4, e_cap=6, support_method="bitmap")
+    orc = oracle.Oracle(n, base)
+    warm = [(1, 3, 4), (1, 4, 5)]
+    g.apply_batch(warm, strategy="fused")
+    orc.apply(warm)
+    assert g._bitmap is not None  # cache is warm going into the regrowth
+    spec0 = g.spec
+    more = [(1, 0, 3), (1, 0, 4), (1, 1, 3), (1, 1, 4), (1, 5, 6),
+            (1, 6, 7), (1, 0, 5), (1, 2, 4)]
+    for op, a, b in more:
+        g.insert(a, b)
+        orc.apply([(op, a, b)])
+    assert g.spec.e_cap > spec0.e_cap and g.spec.d_max > spec0.d_max
+    assert g.phi_dict() == orc.phi
+    # next maintenance call re-warms the cache; it must match a scratch build
+    nxt = [(1, 7, 8), (1, 8, 9), (1, 7, 9), (0, 0, 1)]
+    g.apply_batch(nxt, strategy="fused")
+    orc.apply(nxt)
+    assert g.phi_dict() == orc.phi
+    check_cache(g)
+
+    # fused-batch-triggered regrowth with a warm cache (grow happens inside
+    # apply_batch, between netting and the re-peel)
+    g2 = DynamicGraph(12, [(0, 1), (1, 2), (0, 2)], d_max=4, e_cap=4,
+                      support_method="bitmap")
+    orc2 = oracle.Oracle(12, [(0, 1), (1, 2), (0, 2)])
+    b1 = [(1, 2, 3), (1, 3, 4)]
+    g2.apply_batch(b1, strategy="fused")
+    orc2.apply(b1)
+    assert g2._bitmap is not None
+    spec0 = g2.spec
+    # blow past d_max on node 0 so _grow fires inside this apply_batch
+    b2 = [(1, 0, k) for k in range(3, 12)] + [(1, 3, 5), (1, 4, 6)]
+    g2.apply_batch(b2, strategy="fused")
+    orc2.apply(b2)
+    assert g2.spec.d_max > spec0.d_max
+    assert g2.phi_dict() == orc2.phi
+    check_cache(g2)
+
+
 @pytest.mark.parametrize("method", ["sorted", "bitmap"])
 def test_frozen_boundary_repeel_engines_agree(method):
     """batch_maintain's delta re-peel == recompute re-peel == oracle on a

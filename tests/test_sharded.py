@@ -1,0 +1,284 @@
+"""Sharded peel substrate (ISSUE-5): bitwise equality across device counts.
+
+The mesh-partitioned engine must be *bitwise* exact against the
+single-device engine (and the oracle) for every discipline and every
+consumer path — decompose, the fused batch re-peel, the service flush.
+Multi-device tests shell out to a fresh interpreter with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` so the main pytest
+process keeps its single CPU device (same pattern as test_distributed.py);
+each subprocess compares sharded vs ``mesh=None`` *within* one process so
+both engines see identical inputs.
+
+The kernel row-block tests run in-process: block-equivalence of the fused
+``peel_wave``/``bitmap_support`` slab selection is what makes the per-shard
+kernel calls exact, and it needs no mesh to verify.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, devices: int = 8) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env, cwd=ROOT,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# kernel row-block offsets (in-process, interpret mode)
+# ---------------------------------------------------------------------------
+
+def test_peel_wave_row_blocks_match_full_call():
+    """Concatenating per-block kernel calls == the full-array call — the
+    block-equivalence the sharded engine's per-shard kernel relies on."""
+    from repro.kernels.peel_wave import peel_wave_kernel
+
+    rng = np.random.default_rng(0)
+    e, w = 96, 5
+    a = jnp.asarray(rng.integers(0, 2**32, size=(e, w), dtype=np.uint32))
+    b = jnp.asarray(rng.integers(0, 2**32, size=(e, w), dtype=np.uint32))
+    alive = jnp.asarray(rng.random(e) < 0.8)
+    k = jnp.int32(5)
+    sup_full, kill_full = peel_wave_kernel(a, b, alive, k, interpret=True)
+    for n_blocks in (2, 4):
+        blk = e // n_blocks
+        sups, kills = [], []
+        for i in range(n_blocks):
+            s, kl = peel_wave_kernel(a, b, alive, k, interpret=True,
+                                     row_offset=i * blk, row_count=blk)
+            assert s.shape == (blk,) and kl.shape == (blk,)
+            sups.append(np.asarray(s))
+            kills.append(np.asarray(kl))
+        assert np.array_equal(np.concatenate(sups), np.asarray(sup_full))
+        assert np.array_equal(np.concatenate(kills), np.asarray(kill_full))
+
+
+def test_ops_row_blocks_match_full_call():
+    """The ops wrappers honor row_offset/row_count on both dispatch paths
+    (kernel and pure-jnp reference)."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(1)
+    e, w = 64, 3
+    a = jnp.asarray(rng.integers(0, 2**32, size=(e, w), dtype=np.uint32))
+    b = jnp.asarray(rng.integers(0, 2**32, size=(e, w), dtype=np.uint32))
+    alive = jnp.asarray(rng.random(e) < 0.7)
+    sup_full = np.asarray(ops.bitmap_support(a, b))
+    pw_full = ops.peel_wave(a, b, alive, jnp.int32(4))
+    for use_kernels in (True, False):
+        ops.use_kernels(use_kernels)
+        try:
+            got = np.concatenate([
+                np.asarray(ops.bitmap_support(a, b, row_offset=o, row_count=16))
+                for o in range(0, e, 16)])
+            assert np.array_equal(got, sup_full), use_kernels
+            sup_b, kill_b = zip(*(ops.peel_wave(a, b, alive, jnp.int32(4),
+                                                row_offset=o, row_count=32)
+                                  for o in range(0, e, 32)))
+            assert np.array_equal(np.concatenate([np.asarray(x) for x in sup_b]),
+                                  np.asarray(pw_full[0]))
+            assert np.array_equal(np.concatenate([np.asarray(x) for x in kill_b]),
+                                  np.asarray(pw_full[1]))
+        finally:
+            ops.use_kernels(True)
+
+
+# ---------------------------------------------------------------------------
+# sharded peel == single-device peel, bitwise, per device count
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("devices", [1, 2, 4])
+def test_sharded_peel_bitwise_equal(devices):
+    run_py(f"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import GraphSpec, from_edge_list, build_bitmap, oracle
+from repro.core.graph import with_mesh, pad_state
+from repro.core.peel import peel
+from repro.launch.mesh import make_shard_mesh
+from repro.data.synthetic import powerlaw_graph
+
+n = 48
+edges = powerlaw_graph(n, 4, seed=11)
+adj = {{i: set() for i in range(n)}}
+for a, b in edges:
+    adj[a].add(b); adj[b].add(a)
+ref = oracle.truss_decomposition(adj)
+
+mesh = make_shard_mesh({devices})
+spec0 = GraphSpec(n_nodes=n, d_max=n, e_cap=len(edges))
+spec = with_mesh(spec0, mesh)
+st = pad_state(spec0, from_edge_list(spec0, np.asarray(edges)), spec)
+
+# full decomposition: every discipline, sharded == single == oracle
+for method, engine in (("bitmap", "delta"), ("bitmap", "recompute"),
+                       ("sorted", "recompute")):
+    p1, s1 = peel(spec, st, st.active, method=method, engine=engine)
+    p2, s2 = peel(spec, st, st.active, method=method, engine=engine, mesh=mesh)
+    assert np.array_equal(np.asarray(p1), np.asarray(p2)), (method, engine)
+    assert all(int(a) == int(b) for a, b in zip(s1, s2)), (method, engine, s1, s2)
+    got = {{tuple(e): int(p) for e, p in zip(edges, np.asarray(p2)[:len(edges)])}}
+    assert got == ref, (method, engine)
+
+# frozen-boundary re-peel of random subsets (the fused batch path's shape),
+# with and without a cached bitmap
+st = st._replace(phi=peel(spec, st, st.active, method="bitmap")[0])
+bm = build_bitmap(spec, st, st.active)
+rng = np.random.default_rng(0)
+for trial in range(3):
+    mask = jnp.asarray(rng.random(spec.e_cap) < 0.4) & st.active
+    for method, engine, cache in (("bitmap", "delta", None),
+                                  ("bitmap", "delta", bm),
+                                  ("bitmap", "recompute", None),
+                                  ("sorted", "recompute", None)):
+        p1, s1 = peel(spec, st, mask, bitmap=cache, method=method, engine=engine)
+        p2, s2 = peel(spec, st, mask, bitmap=cache, method=method,
+                      engine=engine, mesh=mesh)
+        assert np.array_equal(np.asarray(p1), np.asarray(p2)), (trial, method, engine)
+        assert all(int(a) == int(b) for a, b in zip(s1, s2))
+print("ok")
+""", devices=devices)
+
+
+@pytest.mark.parametrize("devices", [2, 4])
+def test_sharded_batch_and_service_flush_bitwise(devices):
+    """DynamicGraph.apply_batch (fused) and the TrussService flush shard
+    transparently: phi — and the full GraphState at every generation
+    boundary — is bitwise-equal to the single-device engine and exact vs
+    the oracle."""
+    run_py(f"""
+import numpy as np, tempfile
+from repro.core import DynamicGraph, oracle
+from repro.launch.mesh import make_shard_mesh
+from repro.service import TrussService, TrussStore
+
+rng = np.random.default_rng(7)
+n = 24
+edges = [(i, j) for i in range(n) for j in range(i + 1, n) if rng.random() < 0.2]
+mesh = make_shard_mesh({devices})
+
+for method in ("bitmap", "sorted"):
+    g1 = DynamicGraph(n, edges, support_method=method)
+    g2 = DynamicGraph(n, edges, support_method=method, mesh=mesh)
+    orc = oracle.Oracle(n, edges)
+    present = set(map(tuple, edges))
+    absent = sorted((i, j) for i in range(n) for j in range(i + 1, n)
+                    if (i, j) not in present)
+    rng.shuffle(absent)
+    for step in range(3):
+        ins = [absent.pop() for _ in range(8)]
+        dels = sorted(present)[:4]
+        ups = [(1, a, b) for a, b in ins] + [(0, a, b) for a, b in dels]
+        present.update(ins); present.difference_update(dels)
+        g1.apply_batch(ups, strategy="fused")
+        g2.apply_batch(ups, strategy="fused")
+        orc.apply(ups)
+        assert g1.phi_dict() == g2.phi_dict() == orc.phi, (method, step)
+print("batch ok")
+
+# service: identical write stream through a sharded and an unsharded
+# service; every generation boundary bitwise-equal (phi included)
+# e_cap pinned to a multiple of every tested device count so with_mesh
+# does not pad the sharded service's arrays (full-state equality below
+# compares shapes too)
+with tempfile.TemporaryDirectory() as r1, tempfile.TemporaryDirectory() as r2:
+    s1 = TrussService(n, edges, flush_every=8, store=TrussStore(r1),
+                      support_method="bitmap", e_cap=256)
+    s2 = TrussService(n, edges, flush_every=8, store=TrussStore(r2),
+                      support_method="bitmap", mesh=mesh, e_cap=256)
+    orc = oracle.Oracle(n, edges)
+    present = set(map(tuple, edges))
+    absent = sorted((i, j) for i in range(n) for j in range(i + 1, n)
+                    if (i, j) not in present)
+    rng.shuffle(absent)
+    acked = []
+    for step in range(16):
+        if present and (not absent or rng.random() < 0.4):
+            e = sorted(present)[rng.integers(len(present))]
+            present.discard(e); absent.append(e); up = (0, *e)
+        else:
+            e = absent.pop(); present.add(e); up = (1, *e)
+        s1.submit(*up); s2.submit(*up); acked.append(up)
+        assert s1.gen == s2.gen
+    s1.flush(); s2.flush(); orc.apply(acked)
+    assert s1.graph.phi_dict() == s2.graph.phi_dict() == orc.phi
+    for name, a, b in zip(s1.graph.state._fields, s1.graph.state,
+                          s2.graph.state):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), name
+print("service ok")
+""", devices=devices)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property sweep: random update batches x device counts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("devices", [1, 2, 4])
+def test_sharded_property_sweep(devices):
+    """Random update batches: sharded fused maintenance stays bitwise-equal
+    to the single-device engine (phi, kill counts, wave counts) and exact
+    vs the oracle.  Hypothesis runs *inside* the subprocess so every
+    example reuses the compiled engines."""
+    pytest.importorskip("hypothesis")
+    run_py(f"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from repro.core import DynamicGraph, oracle
+from repro.launch.mesh import make_shard_mesh
+
+N = 14
+mesh = make_shard_mesh({devices})
+BASE = [(i, j) for i in range(N) for j in range(i + 1, N) if (i * 7 + j) % 3 == 0]
+
+
+@st.composite
+def update_batches(draw):
+    present = set(BASE)
+    ops = []
+    for _ in range(draw(st.integers(1, 3))):
+        batch = []
+        for _ in range(draw(st.integers(1, 12))):
+            pool_del = sorted(present)
+            pool_ins = [(i, j) for i in range(N) for j in range(i + 1, N)
+                        if (i, j) not in present]
+            if pool_del and (not pool_ins or draw(st.booleans())):
+                e = pool_del[draw(st.integers(0, len(pool_del) - 1))]
+                present.discard(e); batch.append((0, *e))
+            elif pool_ins:
+                e = pool_ins[draw(st.integers(0, len(pool_ins) - 1))]
+                present.add(e); batch.append((1, *e))
+        ops.append(batch)
+    return ops
+
+
+@settings(max_examples=25, deadline=None)
+@given(update_batches(), st.sampled_from(["bitmap", "sorted"]))
+def check(batches, method):
+    g1 = DynamicGraph(N, BASE, support_method=method)
+    g2 = DynamicGraph(N, BASE, support_method=method, mesh=mesh)
+    orc = oracle.Oracle(N, BASE)
+    for batch in batches:
+        if not batch:
+            continue
+        g1.apply_batch(batch, strategy="fused")
+        g2.apply_batch(batch, strategy="fused")
+        orc.apply(batch)
+        assert g1.phi_dict() == g2.phi_dict() == orc.phi
+        if g1.last_peel_stats is not None and g2.last_peel_stats is not None:
+            assert all(int(a) == int(b) for a, b in
+                       zip(g1.last_peel_stats, g2.last_peel_stats))
+
+
+check()
+print("ok")
+""", devices=devices)
