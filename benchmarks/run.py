@@ -24,17 +24,19 @@ def main() -> None:
                     help="paper-scale sweep (slow on CPU)")
     ap.add_argument("--only", default=None,
                     help="comma list: truss,batch,peel,service,cluster,"
-                         "affected,kernels,distributed,sharded,roofline")
+                         "pipeline,affected,kernels,distributed,sharded,"
+                         "roofline")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (affected_set, batch_update, cluster_scaling,
-                            distributed_bench, kernels_bench, peel_engine,
-                            roofline, service_throughput, sharded_peel,
+                            distributed_bench, ingest_pipeline,
+                            kernels_bench, peel_engine, roofline,
+                            service_throughput, sharded_peel,
                             truss_maintenance)
 
     selected = set((args.only or
-                    "truss,batch,peel,service,cluster,affected,kernels,"
-                    "distributed,sharded,roofline").split(","))
+                    "truss,batch,peel,service,cluster,pipeline,affected,"
+                    "kernels,distributed,sharded,roofline").split(","))
     rows: list = []
     if "truss" in selected:
         print("== truss maintenance (paper Figs. 8-10) ==")
@@ -51,6 +53,9 @@ def main() -> None:
     if "cluster" in selected:
         print("== replicated cluster read scaling (ISSUE-4) ==")
         cluster_scaling.main(rows, quick=not args.full)
+    if "pipeline" in selected:
+        print("== ingest pipeline A/B (ISSUE-6) ==")
+        ingest_pipeline.main(rows, quick=not args.full)
     if "affected" in selected:
         print("== affected-set locality (Lemmas 6/8) ==")
         affected_set.main(rows)

@@ -1,0 +1,177 @@
+#!/usr/bin/env python
+"""Docs lane checks: docstring coverage + docs snippet symbol resolution.
+
+Two gates, no third-party dependencies (stdlib ``ast`` only, so it runs in
+CI without installing a docstring linter):
+
+1. **Docstring coverage** over ``src/repro/{service,cluster,core}``: every
+   module, every public class, and every public function/method must carry
+   a docstring.  (Private names — leading underscore — are exempt, as are
+   ``__init__``/dunders: the class docstring covers construction.)
+
+2. **Snippet symbol resolution** over ``README.md`` and ``docs/*.md``:
+   every ``import``/``from ... import`` statement inside a fenced code
+   block must resolve — the module imports and each imported name getattrs.
+   Additionally, every dotted ``repro.*`` reference in backticks must
+   resolve module-by-module, attribute-by-attribute.  This is what keeps
+   the architecture book's file pointers and the README's API snippets
+   from drifting when code moves.
+
+Exit code 0 = both gates pass; non-zero prints every violation.
+
+    PYTHONPATH=src python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import ast
+import importlib
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+COVERED_PKGS = ("service", "cluster", "core")
+DOC_FILES = ["README.md"] + sorted(
+    os.path.join("docs", f) for f in os.listdir(os.path.join(REPO, "docs"))
+    if f.endswith(".md")) if os.path.isdir(os.path.join(REPO, "docs")) else ["README.md"]
+
+
+# -- gate 1: docstring coverage ----------------------------------------------
+
+def _public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def docstring_violations() -> list[str]:
+    out = []
+    for pkg in COVERED_PKGS:
+        root = os.path.join(REPO, "src", "repro", pkg)
+        for dirpath, _dirs, files in os.walk(root):
+            for fn in sorted(files):
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, REPO)
+                with open(path) as f:
+                    tree = ast.parse(f.read(), filename=rel)
+                if ast.get_docstring(tree) is None:
+                    out.append(f"{rel}: missing module docstring")
+                # top-level defs and methods only: closures inside a
+                # function (loop bodies, scatter helpers) are implementation
+                # detail the enclosing docstring covers
+                for node in tree.body:
+                    if isinstance(node, ast.ClassDef) and _public(node.name):
+                        if ast.get_docstring(node) is None:
+                            out.append(f"{rel}:{node.lineno}: class "
+                                       f"{node.name} missing docstring")
+                        for meth in node.body:
+                            if (isinstance(meth, (ast.FunctionDef,
+                                                  ast.AsyncFunctionDef))
+                                    and _public(meth.name)
+                                    and ast.get_docstring(meth) is None):
+                                out.append(f"{rel}:{meth.lineno}: def "
+                                           f"{node.name}.{meth.name} "
+                                           "missing docstring")
+                    elif isinstance(node, (ast.FunctionDef,
+                                           ast.AsyncFunctionDef)):
+                        if (_public(node.name)
+                                and ast.get_docstring(node) is None):
+                            out.append(f"{rel}:{node.lineno}: def "
+                                       f"{node.name} missing docstring")
+    return out
+
+
+# -- gate 2: docs snippets resolve -------------------------------------------
+
+_FENCE = re.compile(r"```[a-z]*\n(.*?)```", re.S)
+_DOTTED = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`")
+
+
+def _check_import_stmt(node: ast.stmt, where: str, out: list[str]):
+    """Resolve one import statement from a fenced snippet."""
+    try:
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                importlib.import_module(alias.name)
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            mod = importlib.import_module(node.module)
+            for alias in node.names:
+                if alias.name != "*" and not hasattr(mod, alias.name):
+                    out.append(f"{where}: `{node.module}` has no "
+                               f"attribute `{alias.name}`")
+    except Exception as e:  # noqa: BLE001 — report, don't crash the gate
+        out.append(f"{where}: {ast.unparse(node)!r} failed: {e}")
+
+
+def _resolve_dotted(dotted: str, where: str, out: list[str]):
+    """`repro.a.b.c` resolves as the longest importable module prefix plus
+    getattr for the rest."""
+    parts = dotted.split(".")
+    mod, i = None, 0
+    for i in range(len(parts), 0, -1):
+        try:
+            mod = importlib.import_module(".".join(parts[:i]))
+            break
+        except ImportError:
+            continue
+    if mod is None:
+        out.append(f"{where}: `{dotted}` does not import")
+        return
+    obj = mod
+    for name in parts[i:]:
+        if not hasattr(obj, name):
+            out.append(f"{where}: `{dotted}` — `{name}` not found on "
+                       f"`{'.'.join(parts[:i])}`")
+            return
+        obj = getattr(obj, name)
+
+
+def snippet_violations() -> list[str]:
+    out: list[str] = []
+    for doc in DOC_FILES:
+        path = os.path.join(REPO, doc)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            text = f.read()
+        for m in _FENCE.finditer(text):
+            block = m.group(1)
+            if "import" not in block:
+                continue
+            where = f"{doc}:fence@{text[:m.start()].count(chr(10)) + 1}"
+            try:
+                tree = ast.parse(block)
+            except SyntaxError:
+                continue  # shell/ascii-art fences aren't python
+            for node in ast.walk(tree):
+                if isinstance(node, (ast.Import, ast.ImportFrom)):
+                    _check_import_stmt(node, where, out)
+        for m in _DOTTED.finditer(text):
+            where = f"{doc}:{text[:m.start()].count(chr(10)) + 1}"
+            _resolve_dotted(m.group(1), where, out)
+    return out
+
+
+def main() -> int:
+    bad = docstring_violations()
+    if bad:
+        print(f"docstring coverage: {len(bad)} violation(s)")
+        for b in bad:
+            print(f"  {b}")
+    else:
+        print("docstring coverage: OK "
+              f"(src/repro/{{{','.join(COVERED_PKGS)}}})")
+    bad2 = snippet_violations()
+    if bad2:
+        print(f"docs snippets: {len(bad2)} unresolved reference(s)")
+        for b in bad2:
+            print(f"  {b}")
+    else:
+        print(f"docs snippets: OK ({', '.join(DOC_FILES)})")
+    return 1 if (bad or bad2) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

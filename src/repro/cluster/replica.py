@@ -15,6 +15,12 @@ the replica's ``GraphState`` — phi included — is **bitwise-equal** to the
 primary's at every generation boundary it reaches (checked against both the
 primary and the pure-Python oracle in ``tests/test_cluster.py``).
 
+Pipelined primaries (``pipeline=True``) make the WAL tail run *ahead* of
+``commit.json`` by the in-flight + queued generations; replicas are immune
+by construction — ``poll()`` never reads past the published frontier, so
+the acked-but-uncommitted tail is invisible until the primary lands it
+(and ``promote()`` deliberately replays it: acked writes survive failover).
+
 A replica holds no durable state of its own (its lease file is advisory),
 so crash recovery is simply: construct a fresh ``Replica`` and ``poll()``.
 When the primary compacts the WAL past the replica's applied frontier, the
@@ -120,6 +126,7 @@ class Replica:
         return self.svc.handle(req)
 
     def stats(self) -> dict:
+        """Service stats extended with replica id, applied frontier and lag."""
         out = self.svc.stats()
         out["replica_id"] = self.replica_id
         out["wal_applied"] = self.wal_applied

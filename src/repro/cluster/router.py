@@ -24,7 +24,7 @@ from __future__ import annotations
 
 from ..service.api import (BOUNDED, COMMUNITY, MAX_K, MEMBERS,
                            READ_YOUR_WRITES, REPRESENTATIVES, STRONG,
-                           QueryRequest, QueryResponse, WriteAck)
+                           Overloaded, QueryRequest, QueryResponse, WriteAck)
 from ..service.engine import TrussService
 from .replica import Replica
 
@@ -56,22 +56,32 @@ class Session:
         self.router = router
         self.token = 0  # highest generation any of this session's writes commits in
 
-    def submit(self, op: int, a: int, b: int) -> WriteAck:
+    def submit(self, op: int, a: int, b: int) -> WriteAck | Overloaded:
+        """Write through the router; advances the RYW token only on a real ack."""
         ack = self.router.submit(op, a, b)
+        if isinstance(ack, Overloaded):
+            # shed by a pipelined primary's admission control: nothing was
+            # acked, so the session's RYW token must not advance
+            return ack
         self.token = max(self.token, ack.gen)
         return ack
 
     def submit_many(self, updates) -> list[WriteAck]:
+        """Batch write; the token advances to the last ack's generation."""
         acks = self.router.submit_many(updates)
         if acks:
             self.token = max(self.token, acks[-1].gen)
         return acks
 
     def query(self, req: QueryRequest) -> QueryResponse:
+        """Read at this session's read-your-writes token."""
         return self.router.route(req, token=self.token)
 
 
 class QueryRouter:
+    """Routes reads across the primary and its replicas by consistency policy;
+    all writes go to the single primary."""
+
     def __init__(self, primary: TrussService, replicas=(), *,
                  poll_on_miss: bool = True):
         self.primary = primary
@@ -81,13 +91,17 @@ class QueryRouter:
         self.served: dict[str, int] = {}
 
     # -- writes (single-writer: always the primary) ---------------------------
-    def submit(self, op: int, a: int, b: int) -> WriteAck:
+    def submit(self, op: int, a: int, b: int) -> WriteAck | Overloaded:
+        """May return ``Overloaded`` when the primary runs pipelined ingest
+        and its bounded pending queue is full — the client retries."""
         return self.primary.submit(op, a, b)
 
     def submit_many(self, updates) -> list[WriteAck]:
+        """Batch write to the primary (drains cooperatively when pipelined)."""
         return self.primary.submit_many(updates)
 
     def session(self) -> Session:
+        """Open a read-your-writes session bound to this router."""
         return Session(self)
 
     # -- replication heartbeat ------------------------------------------------
@@ -162,6 +176,7 @@ class QueryRouter:
 
     # -- introspection --------------------------------------------------------
     def stats(self) -> dict:
+        """Primary/replica generations, per-replica lag, and routing counters."""
         return {
             "primary_gen": self.primary.gen,
             "replicas": {r.replica_id:

@@ -46,5 +46,6 @@ def decompose(spec: GraphSpec, st: GraphState, method: str = "sorted",
 
 def decompose_and_set(spec: GraphSpec, st: GraphState, method: str = "sorted",
                       bitmap: jax.Array | None = None, mesh=None) -> GraphState:
+    """Convenience: run ``decompose`` and return the state with phi installed."""
     return st._replace(phi=decompose(spec, st, method, bitmap=bitmap,
                                      mesh=mesh))

@@ -33,6 +33,9 @@ from .index import TrussIndex
 
 
 class DynamicGraph:
+    """Mutable truss-maintained graph: owns a ``GraphState``, applies update
+    batches (netted, auto progressive/fused), and serves phi/k-truss views."""
+
     def __init__(self, n_nodes: int, edges=(), d_max: int | None = None,
                  e_cap: int | None = None, support_method: str = "sorted",
                  tracked_ks: tuple[int, ...] = (), mesh=None,
@@ -203,7 +206,7 @@ class DynamicGraph:
         return (kmin, phi_e)
 
     def apply_batch(self, updates, strategy: str = "auto",
-                    fused_threshold: int = 8):
+                    fused_threshold: int = 8, defer_sync: bool = False):
         """Apply a batch of (op, a, b) updates with truss maintenance.
 
         ``fusedBatchUpdate``: the batch is first *netted* on the host (an
@@ -219,6 +222,16 @@ class DynamicGraph:
         ``auto`` picks fused once the netted batch reaches
         ``fused_threshold`` updates (paper Table 3 framing: progressive
         wins at small update counts, batch processing at large ones).
+
+        ``defer_sync=True`` (the service's pipelined flush) returns without
+        blocking on the device result: the fused path dispatches
+        ``batch_maintain`` asynchronously and hands back the device-side
+        invalidation bound ``hi`` (a 0-d int32 ``jax.Array``) *instead of*
+        invalidating the index here — the caller must later run
+        ``index.invalidate(2, max(int(hi), 1))`` (which blocks until the
+        re-peel lands) before serving any label query from this state.
+        Paths that already synchronized (progressive, netted no-op) return
+        ``None``: their invalidation has been taken care of.
         """
         ups = [(int(op), int(a), int(b)) for op, a, b in updates]
         if not ups:
@@ -241,7 +254,7 @@ class DynamicGraph:
         inss = sorted(cur - present0)
         n_net = len(dels) + len(inss)
         if n_net == 0:
-            return
+            return None
         if strategy == "auto":
             strategy = "fused" if n_net >= fused_threshold else "progressive"
         if strategy == "progressive":
@@ -249,7 +262,7 @@ class DynamicGraph:
                 self.delete(a, b)
             for a, b in inss:
                 self.insert(a, b)
-            return
+            return None
         if strategy != "fused":
             raise ValueError(f"unknown strategy {strategy!r}")
         final = np.asarray(sorted(cur), np.int64).reshape(-1, 2)
@@ -291,10 +304,16 @@ class DynamicGraph:
             raise
         self.last_peel_stats = stats
         self._present = cur
+        if defer_sync:
+            # async-dispatch mode: the re-peel is in flight; hand the device
+            # scalar back so the caller can overlap host work and invalidate
+            # once the result lands
+            return hi
         # Updated edges join/leave every level below the range too (they can
         # merge or split components there), so invalidate [2, hi + 1]; the
         # mixed-batch fallback returns hi = +inf, i.e. invalidate everything.
         self.index.invalidate(2, max(int(hi), 1))
+        return None
 
     def batch_update_then_decompose(self, updates):
         """batchUpdate baseline: apply structural updates, re-decompose."""
@@ -326,19 +345,23 @@ class DynamicGraph:
 
     # -- views -----------------------------------------------------------------
     def edge_list(self) -> np.ndarray:
+        """Active edges as an ``[m, 2]`` host array."""
         act = np.asarray(self.state.active)
         return np.asarray(self.state.edges)[act]
 
     def phi_dict(self) -> dict:
+        """Host mapping ``(u, v) -> phi`` over active edges (test/oracle view)."""
         act = np.asarray(self.state.active)
         edges = np.asarray(self.state.edges)[act]
         phis = np.asarray(self.state.phi)[act]
         return {(int(u), int(v)): int(p) for (u, v), p in zip(edges, phis)}
 
     def k_truss(self, k: int) -> np.ndarray:
+        """Edges of the k-truss (``phi >= k``) as an ``[m, 2]`` host array."""
         act = np.asarray(self.state.active) & (np.asarray(self.state.phi) >= k)
         return np.asarray(self.state.edges)[act]
 
     def max_truss(self) -> int:
+        """Largest k with a non-empty k-truss (0 when the graph is empty)."""
         phis = np.asarray(self.state.phi)[np.asarray(self.state.active)]
         return int(phis.max(initial=0))

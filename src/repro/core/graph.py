@@ -61,6 +61,9 @@ class GraphSpec:
 
 
 class GraphState(NamedTuple):
+    """Device-resident graph: edge table, activity mask, phi, and CSR-ish
+    fixed-width adjacency (``nbr``/``eid``/``deg``)."""
+
     edges: jax.Array   # int32[E_cap, 2]
     active: jax.Array  # bool[E_cap]
     phi: jax.Array     # int32[E_cap]
@@ -70,6 +73,7 @@ class GraphState(NamedTuple):
 
 
 def empty_state(spec: GraphSpec) -> GraphState:
+    """Fresh all-inactive state at the spec's capacities (sentinel = n_nodes)."""
     n, d, e = spec.n_nodes, spec.d_max, spec.e_cap
     return GraphState(
         edges=jnp.full((e, 2), n, dtype=jnp.int32),

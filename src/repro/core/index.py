@@ -117,6 +117,7 @@ class TrussIndex:
                 self._dirty.add(k)
 
     def invalidate_all(self):
+        """Mark every tracked level dirty (used after restore/rebuild)."""
         self._dirty.update(self.tracked)
 
     def query(self, st: GraphState, k: int) -> jax.Array:

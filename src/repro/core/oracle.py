@@ -122,6 +122,7 @@ class Oracle:
 
     # -- Algorithm 1: deletion ---------------------------------------------
     def delete(self, a: int, b: int):
+        """Remove edge (a, b) and repair phi per the paper's Algorithm 1."""
         e = _canon(a, b)
         phi_e = self.phi[e]
         partners = self._partner_edges(a, b)
@@ -151,6 +152,7 @@ class Oracle:
 
     # -- Algorithm 2: insertion (mark-and-verify) ---------------------------
     def insert(self, a: int, b: int):
+        """Add edge (a, b) and repair phi per Algorithm 2 (mark-and-verify)."""
         s = self.adj[a] & self.adj[b]
         partners = self._partner_edges(a, b)
         kmin = min((self.phi[f] for f in partners), default=None)
@@ -258,6 +260,7 @@ class Oracle:
 
     # -- queries -------------------------------------------------------------
     def k_truss_edges(self, k: int):
+        """Canonical edge set of the k-truss."""
         return {e for e, p in self.phi.items() if p >= k}
 
     def check(self):

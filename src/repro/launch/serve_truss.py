@@ -26,6 +26,15 @@ Cluster modes (``repro.cluster``):
     # driven by the mixed zipfian read/write workload
     PYTHONPATH=src python -m repro.launch.serve_truss --store /tmp/truss \
         --router --replicas 2 --consistency bounded --bound 2
+
+Pipelined ingest (``--pipeline``): the primary overlaps host WAL work with
+the device re-peel and adapts its generation size toward ``--target-p99``
+(milliseconds); ``--max-pending`` bounds the admission queue, and the drive
+loop backs off and retries when the service sheds a write with
+``Overloaded``:
+
+    PYTHONPATH=src python -m repro.launch.serve_truss --store /tmp/truss \
+        --router --pipeline --target-p99 50 --max-pending 256
 """
 from __future__ import annotations
 
@@ -39,8 +48,27 @@ from ..cluster import QueryRouter, Replica, query_from_record
 from ..data.streams import READ, GraphUpdateStream, MixedWorkloadStream
 from ..data.synthetic import powerlaw_graph
 from ..service import (COMMUNITY, CONSISTENCY_LEVELS, MAX_K, MEMBERS,
-                       REPRESENTATIVES, QueryRequest, TrussService,
-                       TrussStore)
+                       REPRESENTATIVES, Overloaded, QueryRequest,
+                       TrussService, TrussStore)
+
+
+def _pipeline_kw(args) -> dict:
+    """Pipeline flags -> TrussService kwargs (primary constructors only —
+    replicas always tail serially, they never dispatch ahead)."""
+    return dict(pipeline=args.pipeline, target_p99_ms=args.target_p99,
+                max_pending=args.max_pending)
+
+
+def _submit_retry(sink, op: int, a: int, b: int, max_tries: int = 64):
+    """Submit through a session/service, honoring ``Overloaded`` backpressure
+    with the service-suggested backoff.  Returns the eventual ``WriteAck``
+    (the stream is stateful, so a shed write must be retried, not dropped)."""
+    for _ in range(max_tries):
+        ack = sink.submit(op, a, b)
+        if not isinstance(ack, Overloaded):
+            return ack
+        time.sleep(min(ack.retry_after_ms, 100.0) / 1e3)
+    raise RuntimeError(f"write ({op},{a},{b}) shed {max_tries} times")
 
 
 def _query_mix(svc: TrussService, ks, rng) -> list[QueryRequest]:
@@ -85,7 +113,8 @@ def _run_router(args, ks, rng):
     if args.restore:
         primary = TrussService.restore(TrussStore(args.store),
                                        flush_every=args.flush_every,
-                                       indexed=not args.no_index)
+                                       indexed=not args.no_index,
+                                       **_pipeline_kw(args))
         # the node universe comes from the restored spec, not the CLI args
         # (same discipline as the single-node restore path)
         n_nodes = primary.graph.spec.n_nodes
@@ -96,7 +125,8 @@ def _run_router(args, ks, rng):
         primary = TrussService(n_nodes, edges, tracked_ks=ks,
                                flush_every=args.flush_every,
                                store=TrussStore(args.store),
-                               indexed=not args.no_index)
+                               indexed=not args.no_index,
+                               **_pipeline_kw(args))
     replicas = [Replica(args.store, f"replica-{i}",
                         indexed=not args.no_index)
                 for i in range(args.replicas)]
@@ -132,7 +162,7 @@ def _run_router(args, ks, rng):
                 lat.append(time.perf_counter() - t0)
                 n_r += 1
             else:
-                sess.submit(rec[1], rec[2], rec[3])
+                _submit_retry(sess, rec[1], rec[2], rec[3])
                 n_w += 1
         router.poll_replicas()  # replication heartbeat, once per tick
         print(f"tick {tick}: +{n_w} writes, {n_r} reads -> {router.stats()}")
@@ -178,6 +208,15 @@ def main(argv=None):
                     help="router mode: read consistency policy")
     ap.add_argument("--bound", type=int, default=2,
                     help="router mode: staleness bound in generations")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="overlap host WAL work with the device re-peel "
+                         "(double-buffered generations)")
+    ap.add_argument("--target-p99", type=float, default=None,
+                    help="pipeline mode: adapt the generation size toward "
+                         "this per-generation commit latency (ms)")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="pipeline mode: bound on the acked-but-unapplied "
+                         "queue before writes are shed with Overloaded")
     args = ap.parse_args(argv)
 
     ks = tuple(int(k) for k in args.ks.split(","))
@@ -193,7 +232,8 @@ def main(argv=None):
             raise SystemExit("--restore requires --store")
         svc = TrussService.restore(TrussStore(args.store),
                                    flush_every=args.flush_every,
-                                   indexed=not args.no_index)
+                                   indexed=not args.no_index,
+                                   **_pipeline_kw(args))
         # the node universe comes from the restored spec, not the CLI args —
         # a mismatched --nodes must not generate out-of-range updates
         n_nodes = svc.graph.spec.n_nodes
@@ -220,7 +260,7 @@ def main(argv=None):
         store = TrussStore(args.store) if args.store else None
         svc = TrussService(args.nodes, edges, tracked_ks=ks,
                            flush_every=args.flush_every, store=store,
-                           indexed=not args.no_index)
+                           indexed=not args.no_index, **_pipeline_kw(args))
         stream = GraphUpdateStream(edges, args.nodes, chunk=args.chunk,
                                    seed=args.seed + 1)
 

@@ -47,7 +47,21 @@ class WriteAck:
 
 
 @dataclasses.dataclass(frozen=True)
+class Overloaded:
+    """Admission-control rejection (pipelined service only): the bounded
+    pending queue is full and the device is still busy with an in-flight
+    generation, so the write was **not** acked — nothing hit the WAL, the
+    logical view is unchanged, and the client should retry after roughly
+    ``retry_after_ms`` (the service's EWMA of per-generation commit
+    latency).  ``gen`` is the committed generation at rejection time, so a
+    retrying client can tell whether the service is making progress."""
+    retry_after_ms: float
+    gen: int
+
+
+@dataclasses.dataclass(frozen=True)
 class QueryRequest:
+    """A read: kind + parameters + the consistency policy to route it under."""
     kind: str
     k: int = 3
     node: int | None = None                  # COMMUNITY seed (node form)
@@ -70,6 +84,7 @@ class QueryRequest:
 
 @dataclasses.dataclass
 class QueryResponse:
+    """Answer to a ``QueryRequest``, stamped with the generation it is consistent at."""
     request: QueryRequest
     gen: int                         # generation the answer is consistent at
     edges: np.ndarray | None = None  # [m, 2] for edge-set answers
@@ -78,4 +93,5 @@ class QueryResponse:
 
     @property
     def n_edges(self) -> int:
+        """Number of edges in an edge-set answer (0 for scalar answers)."""
         return 0 if self.edges is None else len(self.edges)

@@ -27,6 +27,35 @@ single maintained truss oracle:
 (progressiveUpdate's query path) — used by ``benchmarks/service_throughput``
 to measure what the index buys.
 
+**Pipelined ingest** (``pipeline=True``) double-buffers generations: the
+fused re-peel of generation g is *dispatched* to the device without
+blocking on its result (JAX async dispatch), and while it runs, the host
+keeps admitting, WAL-appending and netting generation g+1 — the serial
+flush's idle ack path becomes the overlap window.  Three invariants are
+preserved exactly:
+
+* **acked-before-applied** — every record is WAL-appended (and fsynced at
+  its generation's dispatch) before the batch that applies it runs;
+* **commit-after-land** — ``commit.json`` advances only when g's device
+  result has landed, so replicas and crash recovery still see a frontier
+  below which the log holds only fully-applied generation groups (the WAL
+  tail may run *ahead* of the frontier by the in-flight + queued
+  generations — tailers must simply not read past it, which they never
+  did);
+* **reads-at-boundaries** — a query drains the pipeline first, so
+  read-your-writes semantics are unchanged (``handle_committed`` only
+  waits for the in-flight generation to land, never dispatches).
+
+The generation boundary itself adapts (``target_p99_ms``): instead of the
+fixed ``flush_every`` constant, the dispatch threshold tracks the measured
+balance point — the EWMA of per-generation commit latency times the EWMA
+host arrival rate, i.e. the records that arrive while one peel runs — and
+doubles when the latency EWMA breaches the p99 target (amortization is all
+that helps once a single peel blows the budget).  Admission control bounds
+the pending queue (``max_pending``): when it is full and the device is
+still busy, ``submit`` sheds load with an explicit ``Overloaded`` ack
+(nothing hits the WAL) instead of stalling the whole ingest path.
+
 The same machinery feeds the replicated serving tier (``repro.cluster``):
 every flush publishes the committed frontier to the store (``commit.json``)
 so read replicas can tail complete generation groups, every ``WriteAck``
@@ -36,6 +65,8 @@ per-replica lag from the lease files tailers publish.
 from __future__ import annotations
 
 import os
+import time
+from typing import NamedTuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -44,20 +75,41 @@ from ..core import DynamicGraph, component_labels
 from ..core import representatives as core_representatives
 from ..core.graph import GraphSpec, GraphState, lookup_edge
 from ..core.maintenance import OP_INSERT
-from .api import (COMMUNITY, MAX_K, MEMBERS, REPRESENTATIVES, QueryRequest,
-                  QueryResponse, WriteAck, WriteRequest)
+from .api import (COMMUNITY, MAX_K, MEMBERS, REPRESENTATIVES, Overloaded,
+                  QueryRequest, QueryResponse, WriteAck, WriteRequest)
 from ..core import index as truss_index
 from .store import TrussStore
 
 _INF = int(truss_index._INF)  # non-member label sentinel (host-side int)
 
+_EWMA_ALPHA = 0.3  # smoothing for the adaptive-flush latency/rate estimates
+
+
+class _Inflight(NamedTuple):
+    """One dispatched-but-unlanded generation (pipeline mode).
+
+    ``hi`` is the device-side index-invalidation bound returned by the
+    deferred ``apply_batch`` — reading it (``int(hi)``) blocks until the
+    whole fused re-peel has landed, which is exactly the completion wait.
+    """
+    gen: int     # generation tag this batch commits as
+    n: int       # WAL records it covers
+    hi: object   # 0-d jax.Array, or None when the dispatch path synced
+    t0: float    # perf_counter at dispatch
+
 
 class TrussService:
+    """The online truss engine: write admission, batched flush, queries,
+    durability.  See the module docstring for the consistency model and
+    the pipelined-ingest design."""
+
     def __init__(self, n_nodes: int, edges=(), *, tracked_ks=(),
                  flush_every: int = 16, strategy: str = "auto",
                  store: TrussStore | None = None, indexed: bool = True,
                  d_max: int | None = None, e_cap: int | None = None,
-                 support_method: str = "sorted", mesh=None):
+                 support_method: str = "sorted", mesh=None,
+                 pipeline: bool = False, target_p99_ms: float | None = None,
+                 max_pending: int | None = None):
         if store is not None and (store.wal_len
                                   or os.path.exists(store.snap_path)):
             raise ValueError(
@@ -77,8 +129,29 @@ class TrussService:
         self._applied_wal = 0        # global WAL index of the committed frontier
         self._view = set(self.graph._present)  # present + pending effects
         self.stream_state = None     # input-stream state from a snapshot
+        self._init_pipeline(pipeline, target_p99_ms, max_pending)
         if store is not None:
             self.snapshot()          # baseline: restore never needs gen 0 WAL
+
+    def _init_pipeline(self, pipeline: bool, target_p99_ms, max_pending):
+        """Pipeline-mode state (no-ops when ``pipeline=False``).  In
+        pipeline mode ``_pending`` holds ``(gen, op, a, b)`` records — the
+        tag is assigned at admission, exactly as it hits the WAL, so the
+        dispatched batches reproduce the WAL's generation groups."""
+        self.pipeline = bool(pipeline)
+        self.target_p99_ms = target_p99_ms
+        self.max_pending = (int(max_pending) if max_pending is not None
+                            else 8 * self.flush_every)
+        # adaptive dispatch threshold; clamped so the open generation can
+        # never grow past the admission bound before it seals
+        self._flush_target = min(self.flush_every, self.max_pending)
+        self._open_gen = self.gen + 1  # tag for the next admitted record
+        self._open_count = 0           # records so far in the open generation
+        self._inflight: _Inflight | None = None
+        self._ewma_gen_s: float | None = None   # per-generation commit latency
+        self._ewma_rate: float | None = None    # host arrival rate, records/s
+        self._last_seal_t: float | None = None
+        self.overloaded = 0            # writes shed by admission control
 
     # -- writes ---------------------------------------------------------------
     @staticmethod
@@ -97,11 +170,16 @@ class TrussService:
             raise ValueError(f"delete of absent edge {key}")
         return key
 
-    def submit(self, op: int, a: int, b: int) -> WriteAck:
+    def submit(self, op: int, a: int, b: int) -> WriteAck | Overloaded:
         """Acknowledge one update.  Validation runs against the *logical*
         view (committed + pending), so an ack is a commitment: the write is
-        durable in the WAL and will apply at the next generation boundary."""
+        durable in the WAL and will apply at the next generation boundary.
+        In pipeline mode a full pending queue with the device busy returns
+        ``Overloaded`` instead (the write is NOT acked — nothing appended,
+        view unchanged); retry after ``retry_after_ms``."""
         op, a, b = int(op), int(a), int(b)
+        if self.pipeline:
+            return self._submit_pipelined(op, a, b)
         key = self._admit(self._view, op, a, b)
         # WAL first: if the append fails (disk full, closed store) the view
         # and pending queue are untouched and the submit can be retried
@@ -117,6 +195,140 @@ class TrussService:
             self.flush()
         return ack
 
+    # -- pipelined ingest (pipeline=True) -------------------------------------
+    def _submit_pipelined(self, op: int, a: int, b: int) -> WriteAck | Overloaded:
+        """Admit one write while an earlier generation's re-peel may still
+        be running on the device.  The host path (validate, WAL-append,
+        queue) never waits for the device; ``_pump`` opportunistically lands
+        a finished generation and dispatches the next sealed one."""
+        self._pump()
+        if (len(self._pending) >= self.max_pending
+                and self._inflight is not None):
+            # bounded queue is full and the device is mid-generation: shed
+            # load explicitly rather than stalling every later writer
+            self.overloaded += 1
+            retry = 1e3 * (self._ewma_gen_s or 1e-3)
+            return Overloaded(retry_after_ms=retry, gen=self.gen)
+        key = self._admit(self._view, op, a, b)
+        gen = self._open_gen
+        # WAL first (acked-before-applied): a failed append leaves the view
+        # and queue untouched, so the submit can simply be retried
+        wal_index = (self.store.append(gen, [(op, a, b)])
+                     if self.store is not None else -1)
+        if op == OP_INSERT:
+            self._view.add(key)
+        else:
+            self._view.discard(key)
+        self._pending.append((gen, op, a, b))
+        self._open_count += 1
+        if self._open_count >= self._flush_target:
+            self._seal()
+        self._pump()
+        return WriteAck(gen=gen, wal_index=wal_index)
+
+    def _seal(self):
+        """Close the open generation: later records tag the next one.  The
+        host arrival rate is sampled here (records per wall-second between
+        seals) — one half of the adaptive-flush balance point."""
+        now = time.perf_counter()
+        if self._last_seal_t is not None and self._open_count > 0:
+            inst = self._open_count / max(now - self._last_seal_t, 1e-9)
+            self._ewma_rate = (inst if self._ewma_rate is None else
+                               (1 - _EWMA_ALPHA) * self._ewma_rate
+                               + _EWMA_ALPHA * inst)
+        self._last_seal_t = now
+        self._open_gen += 1
+        self._open_count = 0
+
+    def _dispatch_next(self):
+        """Dispatch the oldest queued generation group to the device without
+        blocking on the result (requires no generation in flight).  Records
+        leave ``_pending`` here; they count as applied only at completion."""
+        tag = self._pending[0][0]
+        n = 0
+        while n < len(self._pending) and self._pending[n][0] == tag:
+            n += 1
+        group = [rec[1:] for rec in self._pending[:n]]
+        del self._pending[:n]
+        if tag == self._open_gen:
+            # draining a still-open partial group (explicit flush): later
+            # submits start a fresh generation
+            self._seal()
+        if self.store is not None:
+            self.store.fsync()  # durable before applied, exactly like flush
+        t0 = time.perf_counter()
+        hi = self.graph.apply_batch(group, strategy=self.strategy,
+                                    defer_sync=True)
+        if hi is None:
+            # netted no-op or progressive path: already applied and synced —
+            # commit immediately, nothing in flight
+            self._commit_generation(tag, n)
+            return
+        self._inflight = _Inflight(gen=tag, n=n, hi=hi, t0=t0)
+
+    def _commit_generation(self, gen: int, n: int):
+        """Advance the committed frontier: generation ``gen`` (``n`` WAL
+        records) has fully landed."""
+        self.gen = gen
+        self._applied_wal += n
+        if self.store is not None:
+            self.store.publish_commit(self.gen, self._applied_wal)
+
+    def _complete(self, wait: bool = True) -> bool:
+        """Land the in-flight generation.  ``wait=False`` only completes a
+        generation whose device result is already materialized (the
+        opportunistic path ``_pump`` uses); ``wait=True`` blocks.  Returns
+        whether a generation was committed."""
+        inf = self._inflight
+        if inf is None:
+            return False
+        if not wait:
+            try:
+                if not bool(inf.hi.is_ready()):
+                    return False
+            except AttributeError:  # very old jax: no readiness probe —
+                pass                # fall through and block (serial-ish)
+        # int(hi) blocks until the whole fused executable (phi included —
+        # one jit call, one executable) has landed, then the deferred index
+        # invalidation runs before any query can read labels
+        self.graph.index.invalidate(2, max(int(inf.hi), 1))
+        dt = time.perf_counter() - inf.t0
+        self._inflight = None
+        self._commit_generation(inf.gen, inf.n)
+        self._observe_gen_latency(dt)
+        return True
+
+    def _observe_gen_latency(self, dt: float):
+        """EWMA the per-generation commit latency and retune the adaptive
+        dispatch threshold: the balance point is the number of records that
+        arrive while one generation commits (rate x latency) — dispatching
+        less than that grows the queue without bound, much more only adds
+        latency.  When the latency EWMA breaches ``target_p99_ms``, a
+        single peel already blows the budget, so amortize harder (double
+        past the balance point) — throughput is all that can improve."""
+        self._ewma_gen_s = (dt if self._ewma_gen_s is None else
+                            (1 - _EWMA_ALPHA) * self._ewma_gen_s
+                            + _EWMA_ALPHA * dt)
+        if self.target_p99_ms is None or self._ewma_rate is None:
+            return
+        balance = self._ewma_rate * self._ewma_gen_s
+        need = max(1, int(np.ceil(balance * 1.25)))  # keep-up + headroom
+        if self._ewma_gen_s * 1e3 > float(self.target_p99_ms):
+            need *= 2
+        self._flush_target = int(min(max(need, 1), self.max_pending))
+
+    def _pump(self):
+        """Non-blocking pipeline advance: land the in-flight generation if
+        its result has materialized, then (device free) dispatch the oldest
+        sealed generation.  This is the whole overlap mechanism — every
+        host-side admission step calls it, so device completion is noticed
+        at the next write rather than at the next read barrier."""
+        if self._inflight is not None:
+            self._complete(wait=False)
+        while (self._inflight is None and self._pending
+               and self._pending[0][0] < self._open_gen):
+            self._dispatch_next()
+
     def submit_many(self, updates) -> list[WriteAck]:
         """Batch admission: validate every record against the logical view
         first (all-or-nothing — a bad record acks nothing), WAL-append the
@@ -125,10 +337,19 @@ class TrussService:
         are simulated up front so they track auto-flush boundaries
         record-for-record (replay regroups by tag), and the store's dirty
         tracking collapses the internal flushes to a single fsync for the
-        whole call."""
+        whole call.
+
+        Pipeline mode keeps the same all-or-nothing admission and single
+        WAL write, but feeds the queue through the non-blocking ``_pump``
+        path; when the bounded queue fills mid-batch it *drains* (waits for
+        the device) instead of shedding — the whole batch was already acked
+        by the one append, so bulk loads degrade to cooperative blocking
+        rather than returning ``Overloaded``."""
         ups = [(int(op), int(a), int(b)) for op, a, b in updates]
         if not ups:
             return []
+        if self.pipeline:
+            return self._submit_many_pipelined(ups)
         view = set(self._view)
         tagged = []
         gen, pend = self.gen, len(self._pending)
@@ -156,6 +377,55 @@ class TrussService:
                 self.flush()
         return acks
 
+    def _submit_many_pipelined(self, ups) -> list[WriteAck]:
+        """Pipelined twin of ``submit_many``: simulate the generation tags
+        up front (sealing at the *current* adaptive target), append the
+        whole batch once, then walk the tags through the live queue.  The
+        pre-computed tags are authoritative — the adaptive target may
+        retune mid-walk (a completion inside ``_pump`` does that) — so
+        seals are driven by tag changes, not by re-reading the threshold."""
+        view = set(self._view)
+        tagged = []
+        gen, cnt = self._open_gen, self._open_count
+        target = self._flush_target  # frozen for the simulation
+        for op, a, b in ups:
+            key = self._admit(view, op, a, b)
+            if op == OP_INSERT:
+                view.add(key)
+            else:
+                view.discard(key)
+            tagged.append((gen, op, a, b))
+            cnt += 1
+            if cnt >= target:
+                gen += 1
+                cnt = 0
+        # WAL first (one write, rollback on failure leaves nothing acked)
+        start = (self.store.append_tagged(tagged)
+                 if self.store is not None else -1)
+        self._view = view
+        acks = []
+        for i, (tag, op, a, b) in enumerate(tagged):
+            acks.append(WriteAck(gen=tag,
+                                 wal_index=start + i if start >= 0 else -1))
+            if tag != self._open_gen:
+                self._seal()
+                self._open_gen = tag  # tags are authoritative (see above)
+            self._pending.append((tag, op, a, b))
+            self._open_count += 1
+            if len(self._pending) >= self.max_pending:
+                # cooperative bulk-load backpressure: every record is
+                # already durable, so wait for the device instead of
+                # shedding acked work
+                self._complete(wait=True)
+            self._pump()
+        # land the simulation's final open-generation bookkeeping (the last
+        # group may have sealed exactly at the target boundary)
+        if cnt == 0:
+            self._seal()
+        self._open_gen, self._open_count = gen, cnt
+        self._pump()
+        return acks
+
     def handle_write(self, req: WriteRequest) -> WriteAck:
         """Typed-request form of ``submit`` (mirror of ``handle``)."""
         return self.submit(req.op, req.a, req.b)
@@ -165,7 +435,18 @@ class TrussService:
         No-op when nothing is pending.  Returns the committed generation.
         Each commit advances the store's published frontier so replica
         tailers know the WAL prefix below it holds only complete
-        generation groups."""
+        generation groups.
+
+        Pipeline mode: **drain** — land the in-flight generation, then
+        dispatch-and-land every queued group (including a partial open one)
+        in WAL order.  This is the read barrier every query takes, so reads
+        keep happening at generation boundaries with read-your-writes."""
+        if self.pipeline:
+            self._complete(wait=True)
+            while self._pending:
+                self._dispatch_next()
+                self._complete(wait=True)
+            return self.gen
         if not self._pending:
             return self.gen
         if self.store is not None:
@@ -249,7 +530,15 @@ class TrussService:
         acked-but-pending writes stay queued on the admission schedule.
         This is the bounded-staleness read path on a primary (lag 0 from
         the committed generation, and it never interferes with write
-        batching the way the flush-first ``handle`` does)."""
+        batching the way the flush-first ``handle`` does).
+
+        Pipeline mode: the arrays in ``self.graph.state`` belong to the
+        *in-flight* generation (dispatched, possibly unlanded, not yet
+        committed), so this first waits for that generation to land and
+        commits it — a bounded wait for work already running, never a new
+        dispatch.  Queued/sealed generations stay queued."""
+        if self.pipeline:
+            self._complete(wait=True)
         pending, self._pending = self._pending, []
         try:
             return self.handle(req)
@@ -285,7 +574,9 @@ class TrussService:
                             flush_every: int = 16, strategy: str = "auto",
                             indexed: bool = True,
                             support_method: str = "sorted",
-                            mesh=None) -> "TrussService":
+                            mesh=None, pipeline: bool = False,
+                            target_p99_ms=None,
+                            max_pending: int | None = None) -> "TrussService":
         """Rebuild a service around a snapshot tree — no WAL replay.  Shared
         by ``restore`` and the cluster ``Replica`` (which bootstraps with
         ``store=None`` and tails the primary's WAL itself)."""
@@ -304,13 +595,20 @@ class TrussService:
         svc._applied_wal = int(tree["wal_len"])
         svc._view = set(svc.graph._present)
         svc.stream_state = tree.get("stream")
+        svc._init_pipeline(pipeline, target_p99_ms, max_pending)
         return svc
 
     @classmethod
     def restore(cls, store: TrussStore, *, flush_every: int = 16,
                 strategy: str = "auto", indexed: bool = True,
-                support_method: str = "sorted", mesh=None) -> "TrussService":
-        """Last snapshot + WAL-tail replay => the exact pre-crash oracle."""
+                support_method: str = "sorted", mesh=None,
+                pipeline: bool = False, target_p99_ms=None,
+                max_pending: int | None = None) -> "TrussService":
+        """Last snapshot + WAL-tail replay => the exact pre-crash oracle.
+        The replay applies *every* acked record, committed or not — an
+        in-flight generation a pipelined primary lost in the crash is
+        simply discarded on the device side and re-derived here from its
+        WAL group (same guarantee as the serial path)."""
         tree = store.load_snapshot()
         if tree is None:
             raise ValueError(f"no snapshot in {store.root}")
@@ -318,7 +616,9 @@ class TrussService:
                                       flush_every=flush_every,
                                       strategy=strategy, indexed=indexed,
                                       support_method=support_method,
-                                      mesh=mesh)
+                                      mesh=mesh, pipeline=pipeline,
+                                      target_p99_ms=target_p99_ms,
+                                      max_pending=max_pending)
         svc._replay(store.read_wal(start=svc._applied_wal))
         store.publish_commit(svc.gen, svc._applied_wal)
         return svc
@@ -357,6 +657,7 @@ class TrussService:
 
     # -- introspection --------------------------------------------------------
     def stats(self) -> dict:
+        """Operational counters: generations, WAL frontiers, peel + pipeline state."""
         out = {
             "gen": self.gen,
             "n_edges": len(self.graph._present),
@@ -378,9 +679,22 @@ class TrussService:
                               self._applied_wal - int(m.get("wal_applied", 0))}
                     for rid, m in leases.items()}
         # peel cost of the last fused flush (absent after progressive
-        # flushes, which run Algorithms 1/2 instead of a re-peel)
+        # flushes, which run Algorithms 1/2 instead of a re-peel); skipped
+        # while a generation is in flight — the stats arrays belong to the
+        # dispatched executable and reading them would block the pipeline
         ps = self.graph.last_peel_stats
-        if ps is not None:
+        if ps is not None and self._inflight is None:
             out["peel"] = {"waves": int(ps.waves), "kills": int(ps.kills),
                            "deltas": int(ps.deltas)}
+        if self.pipeline:
+            out["pipeline"] = {
+                "flush_target": self._flush_target,
+                "inflight_gen": (self._inflight.gen
+                                 if self._inflight is not None else None),
+                "open_gen": self._open_gen,
+                "ewma_gen_ms": (1e3 * self._ewma_gen_s
+                                if self._ewma_gen_s is not None else None),
+                "ewma_rate": self._ewma_rate,
+                "overloaded": self.overloaded,
+            }
         return out

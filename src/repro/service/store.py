@@ -310,11 +310,13 @@ class TrussStore:
         self._synced_len = self.wal_len
 
     def load_snapshot(self) -> dict | None:
+        """Load the latest checkpoint tree, or None if no snapshot exists."""
         if not os.path.exists(self.snap_path):
             return None
         return checkpoint.restore(self.snap_path)
 
     def close(self):
+        """Release the WAL append handle (no-op for readonly stores)."""
         if self._wal_f is not None:
             self._wal_f.close()
             self._wal_f = None

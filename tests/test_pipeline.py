@@ -1,0 +1,309 @@
+"""Tier-1 tests for the pipelined ingest path (ISSUE-6).
+
+The pipeline changes the service's concurrency model (generation g's
+re-peel runs on the device while g+1 is admitted on the host), so these
+tests pin the three invariants that must survive it:
+
+* **acked-before-applied** — every acked record is WAL-durable before the
+  batch that applies it runs; shed (``Overloaded``) writes leave no trace;
+* **bitwise-equal recovery** — kill the service at randomized points,
+  *including mid-overlap with a dispatched-but-unlanded generation*, and
+  restore() equals the oracle replay of exactly the acked prefix;
+* **replica generation-boundary equality** — a replica tailing a pipelined
+  primary (whose WAL tail runs ahead of ``commit.json``) only ever applies
+  committed groups and stays bitwise-equal at every boundary it reaches.
+
+Shares the pinned ``GraphSpec`` (N/D_MAX/E_CAP) with ``test_service`` so
+the jit caches compile once across the service-layer modules.
+"""
+import numpy as np
+import pytest
+
+from repro.core import oracle
+from repro.data.streams import make_update_stream
+from repro.service import (Overloaded, TrussService, TrussStore, WriteAck)
+from repro.cluster import QueryRouter, Replica
+
+N = 13
+D_MAX = 16
+E_CAP = 160
+
+
+def _svc(edges, tmpdir=None, **kw):
+    store = TrussStore(str(tmpdir)) if tmpdir is not None else None
+    kw.setdefault("tracked_ks", (3, 4))
+    kw.setdefault("pipeline", True)
+    return TrussService(N, edges, d_max=D_MAX, e_cap=E_CAP, store=store, **kw)
+
+
+def _random_graph(rng, p, n=N):
+    return [(i, j) for i in range(n) for j in range(i + 1, n)
+            if rng.random() < p]
+
+
+def _submit_all(svc, stream):
+    """Drive a stateful stream, retrying shed writes (a shed record cannot
+    be skipped: later stream records assume it applied)."""
+    for rec in stream:
+        while True:
+            ack = svc.submit(*map(int, rec))
+            if isinstance(ack, WriteAck):
+                break
+            svc.flush()  # drain and retry (tests are single-threaded)
+
+
+def _assert_bitwise_equal(a: TrussService, b):
+    st_b = b.svc.graph.state if isinstance(b, Replica) else b.graph.state
+    for name, x, y in zip(a.graph.state._fields, a.graph.state, st_b):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), name
+
+
+# -- equivalence of the pipelined write path ---------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_pipelined_matches_oracle(seed, tmp_path):
+    """The pipelined service is observationally equivalent to the serial
+    one: after a drain, phi equals the oracle replay of the stream."""
+    rng = np.random.default_rng(seed)
+    edges = _random_graph(rng, 0.3)
+    stream = make_update_stream(np.asarray(edges), N, 40, seed=seed + 30)
+    svc = _svc(edges, tmp_path, flush_every=5)
+    _submit_all(svc, stream)
+    svc.flush()
+    orc = oracle.Oracle(N, edges)
+    orc.apply(stream)
+    assert svc.graph.phi_dict() == orc.phi
+    assert svc._applied_wal == svc.store.wal_len  # drained == committed
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_pipelined_submit_many_matches_oracle(seed, tmp_path):
+    rng = np.random.default_rng(seed)
+    edges = _random_graph(rng, 0.3)
+    stream = make_update_stream(np.asarray(edges), N, 40, seed=seed + 40)
+    svc = _svc(edges, tmp_path, flush_every=5)
+    acks = svc.submit_many([tuple(map(int, r)) for r in stream])
+    assert len(acks) == len(stream)
+    assert all(isinstance(a, WriteAck) for a in acks)  # bulk never sheds
+    svc.flush()
+    orc = oracle.Oracle(N, edges)
+    orc.apply(stream)
+    assert svc.graph.phi_dict() == orc.phi
+
+
+def test_reads_wait_for_inflight_only(tmp_path):
+    """``handle_committed`` on a pipelined service lands the in-flight
+    generation but leaves sealed/open generations queued (committed reads
+    never force a full drain)."""
+    rng = np.random.default_rng(3)
+    edges = _random_graph(rng, 0.35)
+    svc = _svc(edges, tmp_path, flush_every=4, strategy="fused",
+               max_pending=64)
+    stream = make_update_stream(np.asarray(edges), N, 10, seed=50)
+    _submit_all(svc, stream)
+    from repro.service import MEMBERS, QueryRequest
+    resp = svc.handle_committed(QueryRequest(MEMBERS, k=3))
+    assert svc._inflight is None           # landed, not re-dispatched
+    assert resp.gen == svc.gen             # answered at the committed gen
+    svc.flush()
+    orc = oracle.Oracle(N, edges)
+    orc.apply(stream)
+    assert svc.graph.phi_dict() == orc.phi
+
+
+# -- crash recovery (bitwise vs oracle, randomized kill points) ---------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_pipelined_crash_recovery_randomized_kill_points(seed, tmp_path):
+    """Kill the pipelined service after a random number of acked updates —
+    with queued generations and possibly a dispatched-but-unlanded one —
+    and restore() must equal the oracle on exactly the acked prefix."""
+    rng = np.random.default_rng(seed)
+    edges = _random_graph(rng, 0.3)
+    stream = make_update_stream(np.asarray(edges), N, 40, seed=seed + 60)
+    kill = int(rng.integers(1, len(stream)))
+    snap_at = int(rng.integers(0, kill))
+
+    svc = _svc(edges, tmp_path / f"s{seed}", flush_every=5, max_pending=128)
+    for i, rec in enumerate(stream[:kill]):
+        _submit_all(svc, [rec])
+        if i == snap_at:
+            svc.snapshot()
+    del svc  # crash: in-flight device work (if any) is simply abandoned
+
+    restored = TrussService.restore(TrussStore(str(tmp_path / f"s{seed}")),
+                                    flush_every=5, pipeline=True)
+    orc = oracle.Oracle(N, edges)
+    orc.apply(stream[:kill])
+    assert restored.graph.phi_dict() == orc.phi
+
+    # the restored service keeps serving on the pipelined path
+    _submit_all(restored, stream[kill:])
+    restored.flush()
+    orc.apply(stream[kill:])
+    assert restored.graph.phi_dict() == orc.phi
+
+
+def test_crash_mid_overlap_discards_inflight_replays_acked(tmp_path):
+    """The sharpest kill point: a fused generation is dispatched and NOT
+    landed (``_inflight`` set, commit.json behind the WAL tail).  The crash
+    abandons the device work; restore replays the acked WAL tail and must
+    reproduce every acked record — the lost computation is re-derived."""
+    rng = np.random.default_rng(5)
+    edges = _random_graph(rng, 0.35)
+    stream = make_update_stream(np.asarray(edges), N, 24, seed=70)
+    svc = _svc(edges, tmp_path, flush_every=8, strategy="fused",
+               max_pending=128)
+    _submit_all(svc, stream)
+    assert svc._inflight is not None, "kill point must be mid-overlap"
+    committed_before = svc.gen
+    wal_len = svc.store.wal_len
+    assert svc._applied_wal < wal_len  # WAL tail ahead of the frontier
+    del svc  # crash mid-overlap
+
+    restored = TrussService.restore(TrussStore(str(tmp_path)),
+                                    flush_every=8, strategy="fused",
+                                    pipeline=True)
+    assert restored.gen >= committed_before
+    assert restored._applied_wal == wal_len  # full acked tail replayed
+    orc = oracle.Oracle(N, edges)
+    orc.apply(stream)
+    assert restored.graph.phi_dict() == orc.phi
+
+
+# -- admission control --------------------------------------------------------
+
+def test_overload_sheds_without_acking(tmp_path):
+    """Insert-only burst against a tiny bounded queue: the queue never
+    exceeds ``max_pending``, shed writes return ``Overloaded`` with a
+    positive retry hint, and — acked-before-applied's contrapositive —
+    nothing about a shed write is WAL-appended or folded into the view."""
+    rng = np.random.default_rng(9)
+    edges = _random_graph(rng, 0.2)
+    svc = _svc(edges, tmp_path, flush_every=8, strategy="fused",
+               max_pending=8)
+    present = set(svc._view)
+    shed = 0
+    peak = 0
+    for _ in range(80):
+        while True:
+            a, b = (int(x) for x in rng.integers(0, N, size=2))
+            a, b = min(a, b), max(a, b)
+            if a != b and (a, b) not in present:
+                break
+        wal_before = svc.store.wal_len
+        view_before = set(svc._view)
+        ack = svc.submit(1, a, b)
+        peak = max(peak, len(svc._pending))
+        if isinstance(ack, Overloaded):
+            shed += 1
+            assert ack.retry_after_ms > 0
+            assert svc.store.wal_len == wal_before   # nothing appended
+            assert svc._view == view_before          # nothing admitted
+        else:
+            present.add((a, b))
+    assert peak <= 8
+    assert shed > 0 and svc.overloaded == shed
+    svc.flush()
+    assert set(svc.graph.phi_dict()) == present  # acked inserts, no more
+
+
+def test_adaptive_target_grows_and_stays_bounded(tmp_path):
+    """Under sustained load with an unreachable p99 target the adaptive
+    threshold amortizes harder (grows past the seed value) but never
+    exceeds the admission bound."""
+    rng = np.random.default_rng(11)
+    edges = _random_graph(rng, 0.3)
+    svc = _svc(edges, tmp_path, flush_every=4, strategy="fused",
+               target_p99_ms=0.01, max_pending=64)
+    stream = make_update_stream(np.asarray(edges), N, 120, seed=80)
+    _submit_all(svc, stream)
+    svc.flush()
+    assert 1 <= svc._flush_target <= svc.max_pending
+    assert svc._flush_target > 4, "target should grow past flush_every"
+    assert svc.stats()["pipeline"]["ewma_gen_ms"] is not None
+
+
+def test_router_session_token_unmoved_by_overload(tmp_path):
+    """A shed write must not advance the session's read-your-writes token
+    (the write did not happen)."""
+    rng = np.random.default_rng(13)
+    edges = _random_graph(rng, 0.25)
+    svc = _svc(edges, tmp_path, flush_every=8, strategy="fused",
+               max_pending=4)
+    router = QueryRouter(svc)
+    sess = router.session()
+    present = set(svc._view)
+    saw_shed = False
+    for _ in range(60):
+        while True:
+            a, b = (int(x) for x in rng.integers(0, N, size=2))
+            a, b = min(a, b), max(a, b)
+            if a != b and (a, b) not in present:
+                break
+        token_before = sess.token
+        ack = sess.submit(1, a, b)
+        if isinstance(ack, Overloaded):
+            saw_shed = True
+            assert sess.token == token_before
+        else:
+            present.add((a, b))
+            assert sess.token >= ack.gen or sess.token == token_before
+    assert saw_shed
+
+
+# -- replication over a pipelined primary ------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_replica_tolerates_wal_tail_ahead_of_frontier(seed, tmp_path):
+    """A replica tailing a pipelined primary sees a WAL that runs ahead of
+    commit.json by the in-flight + queued generations.  It must only apply
+    committed groups (never past the frontier), equal the oracle on the
+    committed prefix while the tail is ahead, and be bitwise-equal to the
+    primary once the primary drains."""
+    rng = np.random.default_rng(seed)
+    edges = _random_graph(rng, 0.3)
+    stream = make_update_stream(np.asarray(edges), N, 30, seed=seed + 90)
+    svc = _svc(edges, tmp_path, flush_every=4, strategy="fused",
+               max_pending=128)
+    rep = Replica(str(tmp_path), "r0", strategy="fused")
+    _submit_all(svc, stream)
+    # mid-pipeline: the acked tail runs ahead of the committed frontier
+    tail_ahead = svc.store.wal_len - svc._applied_wal
+    rep.poll()
+    assert rep.gen <= svc.gen
+    assert rep.wal_applied <= svc._applied_wal
+    # the WAL holds exactly the stream records (the baseline lives in the
+    # bootstrap snapshot), so the replica's applied frontier maps directly
+    # onto a stream prefix
+    orc = oracle.Oracle(N, edges)
+    orc.apply(stream[:rep.wal_applied])
+    assert rep.svc.graph.phi_dict() == orc.phi
+    # drain the primary: the tail lands, the replica catches up bitwise
+    svc.flush()
+    assert rep.poll() == svc.gen
+    _assert_bitwise_equal(svc, rep)
+    if tail_ahead > 0:
+        assert rep.wal_applied == svc._applied_wal
+
+
+def test_restore_preserves_pipeline_config(tmp_path):
+    """restore() threads the pipeline kwargs — a restored pipelined service
+    keeps overlapping (regression: ``_from_snapshot_tree`` builds via
+    ``__new__`` and must initialize the pipeline state explicitly)."""
+    rng = np.random.default_rng(17)
+    edges = _random_graph(rng, 0.3)
+    svc = _svc(edges, tmp_path, flush_every=4)
+    svc.snapshot()
+    del svc
+    restored = TrussService.restore(TrussStore(str(tmp_path)),
+                                    pipeline=True, target_p99_ms=25.0,
+                                    max_pending=32)
+    assert restored.pipeline and restored.max_pending == 32
+    assert restored.target_p99_ms == 25.0
+    assert restored.stats()["pipeline"]["flush_target"] <= 32
+    # and a restored *serial* service still works with pipeline attrs off
+    serial = TrussService.restore(TrussStore(str(tmp_path)))
+    assert serial.pipeline is False
+    assert isinstance(serial.submit(1, 0, 12) if (0, 12) not in serial._view
+                      else serial.submit(0, 0, 12), WriteAck)
