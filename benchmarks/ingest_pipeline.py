@@ -47,7 +47,14 @@ from repro.cluster import query_from_record
 from repro.configs import truss_paper
 from repro.data.streams import READ, MixedWorkloadStream
 from repro.data.synthetic import powerlaw_graph
+from repro.obs import metrics as obs_metrics
 from repro.service import (Overloaded, TrussService, TrussStore, WriteAck)
+
+# registry counters diffed around each drive -> the waves/sheds/fsyncs
+# columns of results.csv (run.py reads the trailing telemetry dict)
+_TELEMETRY = {"waves": "truss_peel_waves_total",
+              "sheds": "truss_pipeline_shed_total",
+              "fsyncs": "truss_wal_fsync_total"}
 
 OUT_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "BENCH_pipeline.json")
@@ -58,6 +65,7 @@ def _drive(edges, n_nodes, *, pipeline, ticks, chunk, read_frac, ks,
     """One mode over the fixed workload.  Returns throughput/latency
     aggregates; wall time covers the whole drive including the final
     drain, so 'sustained' means every peel the writes caused is paid."""
+    tel0 = {k: obs_metrics.REGISTRY.value(n) for k, n in _TELEMETRY.items()}
     with tempfile.TemporaryDirectory() as root:
         svc = TrussService(n_nodes, edges, tracked_ks=ks,
                            flush_every=flush_every, store=TrussStore(root),
@@ -102,6 +110,8 @@ def _drive(edges, n_nodes, *, pipeline, ticks, chunk, read_frac, ks,
         "retries": retries,
         "wall_s": round(t_wall, 3),
         "pipeline": pipe_stats,
+        "telemetry": {k: obs_metrics.REGISTRY.value(n) - tel0[k]
+                      for k, n in _TELEMETRY.items()},
     }
 
 
@@ -179,7 +189,8 @@ def main(rows: list, quick: bool = True):
         rows.append((f"pipeline/{name}/{mode}",
                      1e6 / max(r["writes_per_s"], 1e-9),
                      f"writes_per_s={r['writes_per_s']};"
-                     f"w_p99_ms={r['w_p99_ms']};r_p99_ms={r['r_p99_ms']}"))
+                     f"w_p99_ms={r['w_p99_ms']};r_p99_ms={r['r_p99_ms']}",
+                     r["telemetry"]))
         print(f"  {mode:>9}: {r['writes_per_s']:8.1f} writes/s  "
               f"ack p50={r['w_p50_ms']:.3f}ms p99={r['w_p99_ms']:.2f}ms  "
               f"read p99={r['r_p99_ms']:.2f}ms  (retries={r['retries']})")

@@ -2,11 +2,15 @@
 
     PYTHONPATH=src python -m benchmarks.run [--full]
 
-Prints ``name,us_per_call,derived,devices,platform`` CSV and writes
-benchmarks/results.csv.  Rows are 3-tuples ``(name, us, derived)`` —
-stamped with this process's device count and backend — or 4-tuples with an
-explicit device count (benchmarks that sweep device counts in
-subprocesses), so single- and multi-device numbers never silently merge.
+Prints ``name,us_per_call,derived,devices,platform,waves,sheds,fsyncs``
+CSV and writes benchmarks/results.csv.  Rows are 3-tuples
+``(name, us, derived)`` — stamped with this process's device count and
+backend — or 4-tuples with an explicit device count (benchmarks that sweep
+device counts in subprocesses), so single- and multi-device numbers never
+silently merge.  A row may additionally end with a telemetry dict
+(``{"waves", "sheds", "fsyncs"}`` deltas pulled from the obs metrics
+registry) filling the last three columns; rows without one — including
+legacy rows merged from an older results.csv — leave them empty.
 """
 from __future__ import annotations
 
@@ -25,18 +29,18 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: truss,batch,peel,service,cluster,"
                          "pipeline,affected,kernels,distributed,sharded,"
-                         "roofline")
+                         "roofline,obs")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (affected_set, batch_update, cluster_scaling,
                             distributed_bench, ingest_pipeline,
-                            kernels_bench, peel_engine, roofline,
-                            service_throughput, sharded_peel,
+                            kernels_bench, obs_overhead, peel_engine,
+                            roofline, service_throughput, sharded_peel,
                             truss_maintenance)
 
     selected = set((args.only or
                     "truss,batch,peel,service,cluster,pipeline,affected,"
-                    "kernels,distributed,sharded,roofline").split(","))
+                    "kernels,distributed,sharded,roofline,obs").split(","))
     rows: list = []
     if "truss" in selected:
         print("== truss maintenance (paper Figs. 8-10) ==")
@@ -71,6 +75,9 @@ def main() -> None:
     if "roofline" in selected:
         print("== roofline (from dry-run artifacts) ==")
         roofline.main(rows)
+    if "obs" in selected:
+        print("== observability overhead A/B (ISSUE-7) ==")
+        obs_overhead.main(rows, quick=not args.full)
 
     import jax
     ndev_default = jax.device_count()
@@ -78,22 +85,29 @@ def main() -> None:
 
     out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results.csv")
     # A partial run (--only) merges into the existing csv by row name so the
-    # perf trajectory keeps every section's latest numbers.  Legacy 3-column
-    # rows are padded so the file stays uniform under the 5-column header.
+    # perf trajectory keeps every section's latest numbers.  Legacy rows
+    # (3- or 5-column eras) are padded so the file stays uniform under the
+    # 8-column header.
     merged: dict[str, str] = {}
     if args.only and os.path.exists(out):
         with open(out) as f:
             for line in f.read().splitlines()[1:]:
                 if line.strip():
-                    pad = 4 - line.count(",")
+                    pad = 7 - line.count(",")
                     if pad > 0:
                         line += "," * pad
                     merged[line.split(",", 1)[0]] = line
     for row in rows:
         name, us, derived = row[:3]
-        ndev = row[3] if len(row) > 3 else ndev_default
-        merged[name] = f"{name},{us:.1f},{derived},{ndev},{platform}"
-    header = "name,us_per_call,derived,devices,platform"
+        rest = list(row[3:])
+        # an optional trailing telemetry dict fills the waves/sheds/fsyncs
+        # columns; whatever remains (at most one int) is the device count
+        tel = rest.pop() if rest and isinstance(rest[-1], dict) else {}
+        ndev = rest[0] if rest else ndev_default
+        merged[name] = (f"{name},{us:.1f},{derived},{ndev},{platform},"
+                        f"{tel.get('waves', '')},{tel.get('sheds', '')},"
+                        f"{tel.get('fsyncs', '')}")
+    header = "name,us_per_call,derived,devices,platform,waves,sheds,fsyncs"
     print("\n" + header)
     lines = [header]
     for line in merged.values():

@@ -4,8 +4,8 @@
 Two gates, no third-party dependencies (stdlib ``ast`` only, so it runs in
 CI without installing a docstring linter):
 
-1. **Docstring coverage** over ``src/repro/{service,cluster,core}``: every
-   module, every public class, and every public function/method must carry
+1. **Docstring coverage** over ``src/repro/{service,cluster,core,obs}``:
+   every module, public class, and public function/method must carry
    a docstring.  (Private names — leading underscore — are exempt, as are
    ``__init__``/dunders: the class docstring covers construction.)
 
@@ -32,7 +32,7 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "src"))
 
-COVERED_PKGS = ("service", "cluster", "core")
+COVERED_PKGS = ("service", "cluster", "core", "obs")
 DOC_FILES = ["README.md"] + sorted(
     os.path.join("docs", f) for f in os.listdir(os.path.join(REPO, "docs"))
     if f.endswith(".md")) if os.path.isdir(os.path.join(REPO, "docs")) else ["README.md"]

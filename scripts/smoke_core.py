@@ -1,9 +1,16 @@
 """Dev smoke: core truss engine vs oracle on small random graphs, a ~30s
 end-to-end service smoke (ingest, query, snapshot, restore, re-answer), a
 cluster smoke (primary + 2 WAL-tailing replicas + consistency-aware router
-over one store dir: write, read under every policy, promote), and a sharded
+over one store dir: write, read under every policy, promote), a sharded
 smoke (4 emulated devices in a subprocess: decompose + fused batch bitwise
-vs the single-device engine and the oracle).
+vs the single-device engine and the oracle), and an obs smoke (serve_truss
+subprocess with --metrics-port/--trace-out: scrape /metrics mid-run, parse
+it, assert the serving metric families; the exit trace must load as Chrome
+JSON).
+
+    python scripts/smoke_core.py              # everything
+    python scripts/smoke_core.py obs          # one section
+    python scripts/smoke_core.py core service # several
 """
 import os
 import subprocess
@@ -221,10 +228,79 @@ print("ok")
           f"bitwise vs single-device and oracle)")
 
 
-for s in range(15):
-    run_one(s)
-    print(f"seed {s} ok")
-smoke_service()
-smoke_cluster()
-smoke_sharded()
-print("ALL OK")
+def smoke_obs(ticks=4, seed=0):
+    """Telemetry plane, end to end against a real subprocess: launch
+    ``serve_truss`` with ``--metrics-port 0 --trace-out --pipeline``, scrape
+    ``/metrics`` while it serves, parse the page with ``repro.obs.expo`` and
+    assert the serving metric families carry real values; after exit the
+    Chrome trace must load and contain the generation-commit spans."""
+    import json
+    import re
+    import urllib.request
+
+    from repro.obs import expo
+
+    with tempfile.TemporaryDirectory() as root:
+        trace_out = os.path.join(root, "trace.json")
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.serve_truss",
+             "--store", os.path.join(root, "store"), "--nodes", "60",
+             "--ticks", str(ticks), "--chunk", "6", "--seed", str(seed),
+             "--pipeline", "--metrics-port", "0", "--trace-out", trace_out],
+            env=dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu"),
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+        try:
+            # the launcher prints the picked port before serving starts
+            line = proc.stdout.readline()
+            m = re.search(r"http://127\.0\.0\.1:(\d+)/metrics", line)
+            assert m, f"no metrics URL in first line: {line!r}"
+            url = m.group(0)
+            import time as _time
+            page = None
+            while proc.poll() is None:  # scrape until the run finishes
+                try:
+                    with urllib.request.urlopen(url, timeout=5) as r:
+                        assert r.headers["Content-Type"] == expo.CONTENT_TYPE
+                        page = r.read().decode()
+                except OSError:
+                    break  # server already shut down between poll and GET
+                _time.sleep(0.2)
+            out, _ = proc.communicate(timeout=120)
+            assert proc.returncode == 0, out
+        finally:
+            if proc.poll() is None:
+                proc.kill()
+        assert page is not None, "never managed a successful scrape"
+        snap = expo.parse(page)
+        for fam in ("truss_flush_total", "truss_wal_append_records_total",
+                    "truss_wal_fsync_total", "truss_peel_seconds",
+                    "truss_committed_gen", "truss_edges",
+                    "truss_query_seconds"):
+            assert fam in snap, (fam, sorted(snap))
+        assert snap["truss_wal_append_records_total"]["values"][()] > 0
+        with open(trace_out) as f:
+            doc = json.load(f)
+        names = {e["name"] for e in doc["traceEvents"]}
+        assert {"flush", "wal.append", "query"} <= names, names
+    print(f"obs smoke ok (scraped {len(snap)} metric families, "
+          f"{len(doc['traceEvents'])} trace spans)")
+
+
+def smoke_core():
+    """The original per-seed engine-vs-oracle sweep."""
+    for s in range(15):
+        run_one(s)
+        print(f"seed {s} ok")
+
+
+SECTIONS = {"core": smoke_core, "service": smoke_service,
+            "cluster": smoke_cluster, "sharded": smoke_sharded,
+            "obs": smoke_obs}
+
+if __name__ == "__main__":
+    picked = sys.argv[1:] or list(SECTIONS)
+    unknown = [s for s in picked if s not in SECTIONS]
+    assert not unknown, f"unknown sections {unknown}; know {sorted(SECTIONS)}"
+    for s in picked:
+        SECTIONS[s]()
+    print("ALL OK")

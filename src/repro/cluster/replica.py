@@ -34,9 +34,26 @@ serving primary.
 """
 from __future__ import annotations
 
+from ..obs import metrics as obs_metrics, trace as obs_trace
 from ..service.api import QueryRequest, QueryResponse
 from ..service.engine import TrussService
 from ..service.store import TrussStore
+
+_LAG_GENS = obs_metrics.gauge(
+    "truss_replica_lag_gens",
+    "generations behind the primary's committed frontier, per tailer",
+    labels=("replica",))
+_LAG_RECS = obs_metrics.gauge(
+    "truss_replica_lag_records",
+    "WAL records behind the committed frontier, per tailer",
+    labels=("replica",))
+_POLL_GROUPS = obs_metrics.counter(
+    "truss_replica_poll_groups_total",
+    "generation groups applied by WAL tailing", labels=("replica",))
+_SNAP_INSTALLS = obs_metrics.counter(
+    "truss_replica_snapshot_installs_total",
+    "snapshot (re)installs (bootstrap + compaction catch-up)",
+    labels=("replica",))
 
 
 class Replica:
@@ -76,9 +93,12 @@ class Replica:
         if tree is None:
             raise ValueError(
                 f"no snapshot in {self.store.root} — primary not initialized")
-        # store=None: the inner service must never append/fsync/snapshot
-        self.svc = TrussService._from_snapshot_tree(tree, store=None,
-                                                    **self._kw)
+        with obs_trace.span("replica.install", replica=self.replica_id,
+                            gen=int(tree["gen"])):
+            # store=None: the inner service must never append/fsync/snapshot
+            self.svc = TrussService._from_snapshot_tree(tree, store=None,
+                                                        **self._kw)
+        _SNAP_INSTALLS.labels(replica=self.replica_id).inc()
 
     def _publish(self):
         """Refresh the lease file, skipping the write when the applied
@@ -106,15 +126,25 @@ class Replica:
             return self.gen
         high = int(commit["wal_len"])
         if high > self.wal_applied:
-            # stop at the committed frontier: complete groups only, and the
-            # store's tail cache parks there so the next poll is O(new)
-            tail = self.store.read_wal(start=self.wal_applied, stop=high)
-            if self.store.base > self.wal_applied:
-                # the primary compacted past us: records [applied, base) are
-                # gone but covered by a newer snapshot — reinstall, re-tail
-                self._install_snapshot()
+            with obs_trace.span("replica.poll", replica=self.replica_id,
+                                start=self.wal_applied, stop=high):
+                # stop at the committed frontier: complete groups only, and
+                # the store's tail cache parks there so the next poll is
+                # O(new)
                 tail = self.store.read_wal(start=self.wal_applied, stop=high)
-            self.svc._replay(tail, max_groups=max_gens)
+                if self.store.base > self.wal_applied:
+                    # the primary compacted past us: records [applied, base)
+                    # are gone but covered by a newer snapshot — reinstall,
+                    # re-tail
+                    self._install_snapshot()
+                    tail = self.store.read_wal(start=self.wal_applied,
+                                               stop=high)
+                groups = self.svc._replay(tail, max_groups=max_gens)
+                _POLL_GROUPS.labels(replica=self.replica_id).inc(groups)
+        _LAG_GENS.labels(replica=self.replica_id).set(
+            int(commit["gen"]) - self.gen)
+        _LAG_RECS.labels(replica=self.replica_id).set(
+            int(commit["wal_len"]) - self.wal_applied)
         self._publish()
         return self.gen
 

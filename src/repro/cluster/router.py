@@ -22,11 +22,17 @@ floor (``poll_on_miss``) — and callers drive steady-state catch-up with
 """
 from __future__ import annotations
 
+from ..obs import metrics as obs_metrics
 from ..service.api import (BOUNDED, COMMUNITY, MAX_K, MEMBERS,
                            READ_YOUR_WRITES, REPRESENTATIVES, STRONG,
                            Overloaded, QueryRequest, QueryResponse, WriteAck)
 from ..service.engine import TrussService
 from .replica import Replica
+
+_ROUTED = obs_metrics.counter(
+    "truss_router_reads_total",
+    "reads routed, by consistency policy and serving node",
+    labels=("consistency", "node"))
 
 
 def query_from_record(rec, consistency: str = STRONG,
@@ -153,12 +159,15 @@ class QueryRouter:
                 resp = self.primary.handle_committed(req)
                 resp.served_by = "primary"
                 self.served["primary"] = self.served.get("primary", 0) + 1
+                _ROUTED.labels(consistency=req.consistency,
+                               node="primary").inc()
                 return resp
             else:
                 node, name = self.primary, "primary"
         resp = node.handle(req)
         resp.served_by = name
         self.served[name] = self.served.get(name, 0) + 1
+        _ROUTED.labels(consistency=req.consistency, node=name).inc()
         return resp
 
     # -- failover -------------------------------------------------------------
@@ -176,7 +185,15 @@ class QueryRouter:
 
     # -- introspection --------------------------------------------------------
     def stats(self) -> dict:
-        """Primary/replica generations, per-replica lag, and routing counters."""
+        """Primary/replica generations, per-replica lag, and routing
+        counters.  ``served`` is this router's own tally; ``routed`` folds
+        the process-wide ``truss_router_reads_total`` registry family down
+        to per-consistency totals (see docs/OBSERVABILITY.md)."""
+        by_policy: dict[str, int] = {}
+        fam = obs_metrics.REGISTRY.families().get("truss_router_reads_total")
+        if fam is not None:
+            for key, child in fam.children().items():
+                by_policy[key[0]] = by_policy.get(key[0], 0) + child.value
         return {
             "primary_gen": self.primary.gen,
             "replicas": {r.replica_id:
@@ -184,4 +201,5 @@ class QueryRouter:
                           "lag_gens": self.primary.gen - r.gen}
                          for r in self.replicas},
             "served": dict(self.served),
+            "routed": by_policy,
         }

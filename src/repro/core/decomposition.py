@@ -20,14 +20,16 @@ from __future__ import annotations
 
 import jax
 
+from ..obs import profiling, trace
 from .graph import GraphSpec, GraphState
-from .peel import peel as run_peel
+from .peel import PeelStats, peel as run_peel
 
 
-def decompose(spec: GraphSpec, st: GraphState, method: str = "sorted",
-              engine: str = "auto", chunk: int = 64,
-              bitmap: jax.Array | None = None, mesh=None) -> jax.Array:
-    """Return phi[E_cap] for the active subgraph of ``st``.
+def decompose_with_stats(spec: GraphSpec, st: GraphState,
+                         method: str = "sorted", engine: str = "auto",
+                         chunk: int = 64, bitmap: jax.Array | None = None,
+                         mesh=None) -> tuple[jax.Array, PeelStats]:
+    """Return ``(phi[E_cap], PeelStats)`` for the active subgraph of ``st``.
 
     method: 'sorted'  — searchsorted row intersection (sparse-friendly)
             'bitmap'  — adjacency-bitmap popcount (dense/small-N friendly,
@@ -38,9 +40,24 @@ def decompose(spec: GraphSpec, st: GraphState, method: str = "sorted",
     mesh:   optional ``Mesh`` — run the peel edge-sharded over
             ``mesh[spec.shard_axis]`` (bitwise-equal; ``distributed.py``
             is a host-side convenience façade over this same argument).
+
+    Host-level entry (the jitted peel is dispatched from here), so it
+    carries the ``decompose`` trace span and the ``--profile-dir``
+    ``jax.profiler`` region.
     """
-    phi, _ = run_peel(spec, st, st.active, bitmap=bitmap,
-                      method=method, engine=engine, chunk=chunk, mesh=mesh)
+    with trace.span("decompose", method=method, engine=engine,
+                    e_cap=spec.e_cap):
+        with profiling.profile_region("decompose"):
+            return run_peel(spec, st, st.active, bitmap=bitmap, method=method,
+                            engine=engine, chunk=chunk, mesh=mesh)
+
+
+def decompose(spec: GraphSpec, st: GraphState, method: str = "sorted",
+              engine: str = "auto", chunk: int = 64,
+              bitmap: jax.Array | None = None, mesh=None) -> jax.Array:
+    """``decompose_with_stats`` without the stats: just phi[E_cap]."""
+    phi, _ = decompose_with_stats(spec, st, method, engine, chunk,
+                                  bitmap=bitmap, mesh=mesh)
     return phi
 
 

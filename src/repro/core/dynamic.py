@@ -25,11 +25,17 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
+from ..obs import metrics as obs_metrics, trace as obs_trace
 from . import batch, decomposition, maintenance
 from .graph import (GraphSpec, GraphState, build_bitmap, from_edge_list,
                     lookup_edge, pad_state, shard_state, update_bitmap,
                     with_mesh)
 from .index import TrussIndex
+from .peel import EMPTY_STATS
+
+_PROGRESSIVE_N = obs_metrics.counter(
+    "truss_progressive_updates_total",
+    "single-edge Algorithm-1/2 maintenance operations")
 
 
 class DynamicGraph:
@@ -60,10 +66,13 @@ class DynamicGraph:
             self.state = shard_state(self.spec, self.state, mesh)
         self.support_method = support_method
         self._bitmap = None
-        self.last_peel_stats = None
-        self.state = decomposition.decompose_and_set(
+        phi, stats = decomposition.decompose_with_stats(
             self.spec, self.state, support_method, bitmap=self._bitmap_cache(),
             mesh=self.mesh)
+        self.state = self.state._replace(phi=phi)
+        # every maintenance path records a PeelStats — never None (the
+        # initial decomposition's peel counts as the first one)
+        self.last_peel_stats = stats
         self.index = TrussIndex(self.spec, tracked_ks)
         # Host mirror of the present-edge set, kept in sync by every update
         # path so batch netting never forces a device->host transfer.
@@ -88,7 +97,7 @@ class DynamicGraph:
                                   mesh)
         g.support_method = support_method
         g._bitmap = None
-        g.last_peel_stats = None
+        g.last_peel_stats = EMPTY_STATS  # phi trusted as-is: no peel ran
         g.index = TrussIndex(g.spec, tracked_ks)
         act = np.asarray(g.state.active)
         edges = np.asarray(g.state.edges)[act]
@@ -172,7 +181,10 @@ class DynamicGraph:
         self._ensure_capacity(a, b, inserting=True)
         _lo, hi = self._range_of(a, b, inserting=True)
         self.state = maintenance.insert_edge_maintain(self.spec, self.state, a, b)
-        self.last_peel_stats = None  # Algorithm-2 path: no peel ran
+        # Algorithm-2 path: no peel ran — record the empty stats rather than
+        # None so consumers (service stats, telemetry) never need guards
+        self.last_peel_stats = EMPTY_STATS
+        _PROGRESSIVE_N.inc()
         # Other edges' phi moves only inside the Theorem-2 range, but the
         # inserted edge itself joins (and can merge components of) every
         # level k <= phi(e) <= hi + 1 — invalidate from the bottom.
@@ -184,7 +196,9 @@ class DynamicGraph:
         """progressiveUpdate deletion (Algorithm 1)."""
         _lo, hi = self._range_of(a, b, inserting=False)
         self.state = maintenance.delete_edge_maintain(self.spec, self.state, a, b)
-        self.last_peel_stats = None  # Algorithm-1 path: no peel ran
+        # Algorithm-1 path: no peel ran — empty stats, never None
+        self.last_peel_stats = EMPTY_STATS
+        _PROGRESSIVE_N.inc()
         # The deleted edge leaves (and can split components of) every level
         # k <= phi(e), not just the Theorem-1 phi range.
         self.index.invalidate(2, max(hi, 1))
@@ -292,10 +306,15 @@ class DynamicGraph:
             self._bitmap_cache()
             self._bitmap_apply(dels, inss)
         try:
-            self.state, _lo, hi, stats = batch.batch_maintain(
-                self.spec, self.state, da, db, dm, ia, ib, im,
-                method=self.support_method, bitmap=self._bitmap,
-                mesh=self.mesh)
+            # span covers the host-side apply window: with defer_sync the
+            # fused re-peel is dispatched here and lands later (the
+            # service's gen.land span covers the wait)
+            with obs_trace.span("graph.apply_batch", dels=len(dels),
+                                ins=len(inss), defer=defer_sync):
+                self.state, _lo, hi, stats = batch.batch_maintain(
+                    self.spec, self.state, da, db, dm, ia, ib, im,
+                    method=self.support_method, bitmap=self._bitmap,
+                    mesh=self.mesh)
         except BaseException:
             # the cache already describes the post-update edge set but
             # state/_present still the pre-update one — drop it rather than
@@ -337,9 +356,11 @@ class DynamicGraph:
         if self.mesh is not None:
             self.state = shard_state(self.spec, self.state, self.mesh)
         self._bitmap = None  # wholesale structural rebuild: cache is stale
-        self.state = decomposition.decompose_and_set(
+        phi, stats = decomposition.decompose_with_stats(
             self.spec, self.state, self.support_method,
             bitmap=self._bitmap_cache(), mesh=self.mesh)
+        self.state = self.state._replace(phi=phi)
+        self.last_peel_stats = stats
         self.index = TrussIndex(self.spec, self.index.tracked)
         self.index.invalidate_all()
 

@@ -128,16 +128,36 @@ def chunk_partners(spec: GraphSpec, st: GraphState, idx: jax.Array,
 # ---------------------------------------------------------------------------
 
 class PeelStats(NamedTuple):
-    """Instrumentation returned by every ``delta_peel`` call (int32 scalars).
+    """Instrumentation returned by every peel-engine call (int32 scalars).
 
-    waves:  while-loop iterations (kill chunks + level advances)
-    kills:  peelable edges assigned a phi
-    deltas: scatter-subtracted support updates (the work the recompute
-            engine would have paid O(E·D) per wave for)
+    waves:    while-loop iterations (kill chunks + level advances)
+    kills:    peelable edges assigned a phi
+    deltas:   scatter-subtracted support updates (the work the recompute
+              engine would have paid O(E·D) per wave for)
+    frontier: peelable edges entering the peel (|peel_mask ∩ active| — the
+              affected-set size on the fused batch path, E on a full
+              decompose)
+
+    Every engine (delta/recompute, single-device/sharded) fills every
+    field identically, so the sharded bitwise-equality tests compare these
+    elementwise.  ``stats_dict`` converts to host ints for span attributes
+    and the metrics registry; ``EMPTY_STATS`` is the no-peel record the
+    progressive Algorithm-1/2 paths report (host ints, all zero).
     """
     waves: jax.Array
     kills: jax.Array
     deltas: jax.Array
+    frontier: jax.Array = 0
+
+
+EMPTY_STATS = PeelStats(0, 0, 0, 0)
+
+
+def stats_dict(ps: PeelStats) -> dict:
+    """Host-int dict of a ``PeelStats`` (``int()`` blocks until device
+    arrays land — call only after the peel's results are needed anyway)."""
+    return {"waves": int(ps.waves), "kills": int(ps.kills),
+            "deltas": int(ps.deltas), "frontier": int(ps.frontier)}
 
 
 class _Carry(NamedTuple):
@@ -214,10 +234,12 @@ def delta_peel(spec: GraphSpec, st: GraphState, peel: jax.Array,
     alive0 = peel | (frozen & (fphi >= 3))
 
     if method == "bitmap":
-        return _peel_bitmap(spec, st, peel, frozen, fphi, alive0, bitmap)
-    if method != "sorted":
+        phi, stats = _peel_bitmap(spec, st, peel, frozen, fphi, alive0, bitmap)
+    elif method == "sorted":
+        phi, stats = _peel_sorted(spec, st, peel, frozen, fphi, alive0, chunk)
+    else:
         raise ValueError(f"unknown method {method!r}")
-    return _peel_sorted(spec, st, peel, frozen, fphi, alive0, chunk)
+    return phi, stats._replace(frontier=jnp.sum(peel, dtype=jnp.int32))
 
 
 @partial(jax.jit, static_argnames=("spec", "method"))
@@ -262,7 +284,8 @@ def recompute_peel(spec: GraphSpec, st: GraphState, peel: jax.Array,
     init = (peel, st.phi, jnp.int32(3), jnp.int32(0), jnp.int32(0))
     _, phi, _, waves, kills = jax.lax.while_loop(cond, body, init)
     return (jnp.where(st.active, phi, 0),
-            PeelStats(waves, kills, jnp.int32(0)))
+            PeelStats(waves, kills, jnp.int32(0),
+                      jnp.sum(peel, dtype=jnp.int32)))
 
 
 def _peel_bitmap(spec, st, peel, frozen, fphi, alive0, bitmap):
@@ -461,16 +484,16 @@ def sharded_peel(spec: GraphSpec, st: GraphState, peel_mask: jax.Array,
         has_bitmap = bitmap is not None
         if bitmap is None:
             bitmap = jnp.zeros((1, 1), jnp.uint32)  # placeholder, rebuilt inside
-        phi, waves, kills, deltas = _sharded_delta_bitmap(
+        phi, waves, kills, deltas, frontier = _sharded_delta_bitmap(
             spec, st.edges, st.active, st.phi, peel_mask, bitmap,
             mesh=mesh, has_bitmap=has_bitmap)
-        return phi, PeelStats(waves, kills, deltas)
+        return phi, PeelStats(waves, kills, deltas, frontier)
     if engine != "recompute":
         raise ValueError(f"unknown engine {engine!r}")
-    phi, waves, kills = _sharded_recompute(
+    phi, waves, kills, frontier = _sharded_recompute(
         spec, st.edges, st.active, st.phi, peel_mask, st.nbr, st.eid,
         mesh=mesh, method=method)
-    return phi, PeelStats(waves, kills, jnp.int32(0))
+    return phi, PeelStats(waves, kills, jnp.int32(0), frontier)
 
 
 @partial(jax.jit, static_argnames=("spec", "mesh", "has_bitmap"))
@@ -533,11 +556,12 @@ def _sharded_delta_bitmap(spec: GraphSpec, edges, active, phi0, peel_mask,
                            jnp.int32(0), go0)
         out = jax.lax.while_loop(cond, body, init)
         return (jnp.where(active, out.phi, 0), out.waves,
-                jax.lax.psum(out.kills, ax), jax.lax.psum(out.deltas, ax))
+                jax.lax.psum(out.kills, ax), jax.lax.psum(out.deltas, ax),
+                jax.lax.psum(jnp.sum(peelm, dtype=jnp.int32), ax))
 
     mapped = shard_map(local_fn, mesh=mesh,
                        in_specs=(P(ax, None), P(ax), P(ax), P(ax), P()),
-                       out_specs=(P(ax), P(), P(), P()),
+                       out_specs=(P(ax), P(), P(), P(), P()),
                        check=False)
     return mapped(edges, active, phi0, peel_mask, bitmap)
 
@@ -602,10 +626,11 @@ def _sharded_recompute(spec: GraphSpec, edges, active, phi0, peel_mask,
 
         init = (peelm, phi0, jnp.int32(3), jnp.int32(0), jnp.int32(0), go0)
         alive, phi, _, waves, kills, _ = jax.lax.while_loop(cond, body, init)
-        return (jnp.where(active, phi, 0), waves, jax.lax.psum(kills, ax))
+        return (jnp.where(active, phi, 0), waves, jax.lax.psum(kills, ax),
+                jax.lax.psum(jnp.sum(peelm, dtype=jnp.int32), ax))
 
     mapped = shard_map(local_fn, mesh=mesh,
                        in_specs=(P(ax, None), P(ax), P(ax), P(ax), P(), P()),
-                       out_specs=(P(ax), P(), P()),
+                       out_specs=(P(ax), P(), P(), P()),
                        check=False)
     return mapped(edges, active, phi0, peel_mask, nbr, eid)

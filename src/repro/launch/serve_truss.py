@@ -35,6 +35,16 @@ loop backs off and retries when the service sheds a write with
 
     PYTHONPATH=src python -m repro.launch.serve_truss --store /tmp/truss \
         --router --pipeline --target-p99 50 --max-pending 256
+
+Telemetry (``docs/OBSERVABILITY.md``): ``--metrics-port`` serves the
+process registry as a Prometheus text endpoint (``/metrics``; port 0 picks
+a free port and prints it), ``--trace-out FILE`` writes the span ring as
+Chrome ``trace_event`` JSON on exit (load in ``chrome://tracing``), and
+``--profile-dir DIR`` arms ``jax.profiler`` captures around the flush and
+decompose regions:
+
+    PYTHONPATH=src python -m repro.launch.serve_truss --store /tmp/truss \
+        --pipeline --metrics-port 9100 --trace-out /tmp/truss-trace.json
 """
 from __future__ import annotations
 
@@ -47,6 +57,7 @@ import numpy as np
 from ..cluster import QueryRouter, Replica, query_from_record
 from ..data.streams import READ, GraphUpdateStream, MixedWorkloadStream
 from ..data.synthetic import powerlaw_graph
+from ..obs import expo, profiling, trace
 from ..service import (COMMUNITY, CONSISTENCY_LEVELS, MAX_K, MEMBERS,
                        REPRESENTATIVES, Overloaded, QueryRequest,
                        TrussService, TrussStore)
@@ -217,11 +228,42 @@ def main(argv=None):
     ap.add_argument("--max-pending", type=int, default=None,
                     help="pipeline mode: bound on the acked-but-unapplied "
                          "queue before writes are shed with Overloaded")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the metrics registry as a Prometheus text "
+                         "endpoint on this port (0 = pick a free port)")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write the span ring as Chrome trace_event JSON "
+                         "on exit (chrome://tracing / Perfetto)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="arm jax.profiler captures around the flush and "
+                         "decompose regions; traces land under DIR")
     args = ap.parse_args(argv)
 
     ks = tuple(int(k) for k in args.ks.split(","))
     rng = np.random.default_rng(args.seed)
 
+    metrics_server = None
+    if args.metrics_port is not None:
+        metrics_server = expo.MetricsServer(port=args.metrics_port)
+        metrics_server.start()
+        print(f"metrics: http://127.0.0.1:{metrics_server.port}/metrics")
+    if args.profile_dir is not None:
+        profiling.configure(args.profile_dir)
+    try:
+        return _dispatch(args, ks, rng)
+    finally:
+        if args.trace_out is not None:
+            trace.write_chrome(args.trace_out)
+            print(f"trace -> {args.trace_out} "
+                  f"({len(trace.TRACER.events())} spans)")
+        if metrics_server is not None:
+            metrics_server.stop()
+        profiling.configure(None)
+
+
+def _dispatch(args, ks, rng):
+    """Run the selected serving mode (split from ``main`` so the telemetry
+    plumbing wraps every mode uniformly)."""
     if args.replica_of:
         return _run_replica(args, ks, rng)
     if args.router:

@@ -1,0 +1,223 @@
+"""Ring-buffered structured trace: spans, JSONL, Chrome trace_event export.
+
+``span("gen.dispatch", gen=7)`` opens a context-managed span; on exit a
+``SpanEvent`` (name, start, duration, parent/depth, attributes) lands in a
+fixed-capacity ring buffer — old events are overwritten, recording never
+blocks or grows.  The clock is injectable (``Tracer(clock=...)``) so tests
+drive nesting and durations deterministically; the default is
+``time.perf_counter_ns`` (monotonic).
+
+Spans nest per tracer via an explicit stack: ``parent`` is the enclosing
+span's ``seq`` (-1 at top level) and ``depth`` its stack depth, so the
+flush→dispatch→land overlap of the pipelined service reads directly off
+the event list.  Attributes set after work completes
+(``sp.set(waves=3)``) attach per-wave ``PeelStats`` data to the span that
+ran the peel instead of a return value callers must remember to keep.
+
+Exports:
+
+* ``TraceWriter`` — incremental JSONL (one event dict per line);
+* ``chrome_trace``/``write_chrome`` — Chrome ``trace_event`` JSON ("X"
+  complete events, microsecond timestamps) loadable in ``chrome://tracing``
+  / Perfetto; see ``docs/OBSERVABILITY.md`` for how to read one.
+
+Recording is a no-op (a shared null span) while ``repro.obs`` is disabled.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import NamedTuple
+
+from .state import STATE
+
+
+class SpanEvent(NamedTuple):
+    """One completed span: identity, nesting, timing, attributes."""
+    seq: int        # creation order, unique per tracer
+    parent: int     # seq of the enclosing span, -1 at top level
+    depth: int      # nesting depth (0 = top level)
+    name: str
+    t0_ns: int      # clock() at entry
+    dur_ns: int     # clock() delta entry -> exit
+    attrs: dict | None
+
+
+class _NullSpan:
+    """Shared no-op span handed out while obs is disabled."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def set(self, **kv):
+        """No-op."""
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    """A live (entered, not yet exited) span; records itself on exit."""
+
+    __slots__ = ("_tracer", "name", "attrs", "seq", "parent", "depth", "t0")
+
+    def __init__(self, tracer: "Tracer", name: str, attrs: dict | None):
+        self._tracer = tracer
+        self.name = name
+        self.attrs = attrs
+
+    def __enter__(self):
+        tr = self._tracer
+        self.parent = tr._stack[-1] if tr._stack else -1
+        self.depth = len(tr._stack)
+        self.seq = tr._seq
+        tr._seq += 1
+        tr._stack.append(self.seq)
+        self.t0 = tr.clock()
+        return self
+
+    def __exit__(self, *exc):
+        tr = self._tracer
+        t1 = tr.clock()
+        tr._stack.pop()
+        tr._record(SpanEvent(self.seq, self.parent, self.depth, self.name,
+                             self.t0, t1 - self.t0, self.attrs))
+        return False
+
+    def set(self, **kv):
+        """Attach/overwrite attributes on the live span (e.g. results known
+        only after the spanned work completes)."""
+        self.attrs = {**(self.attrs or {}), **kv}
+
+
+class Tracer:
+    """Span recorder around one ring buffer and one nesting stack."""
+
+    def __init__(self, capacity: int = 65536, clock=time.perf_counter_ns):
+        self.capacity = int(capacity)
+        self.clock = clock
+        self._buf: list = [None] * self.capacity
+        self._n = 0          # total events ever recorded
+        self._seq = 0        # span ids handed out
+        self._stack: list[int] = []
+
+    def span(self, name: str, **attrs) -> "_Span | _NullSpan":
+        """Open a context-managed span (null span while obs is disabled)."""
+        if not STATE.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, attrs or None)
+
+    def instant(self, name: str, **attrs):
+        """Record a zero-duration event at the current time/nesting (e.g.
+        an admission-control shed)."""
+        if not STATE.enabled:
+            return
+        parent = self._stack[-1] if self._stack else -1
+        seq, self._seq = self._seq, self._seq + 1
+        self._record(SpanEvent(seq, parent, len(self._stack), name,
+                               self.clock(), 0, attrs or None))
+
+    def _record(self, ev: SpanEvent):
+        self._buf[self._n % self.capacity] = ev
+        self._n += 1
+
+    def events(self) -> list[SpanEvent]:
+        """Buffered events in recording (completion) order, oldest first."""
+        if self._n <= self.capacity:
+            return [e for e in self._buf[:self._n]]
+        i = self._n % self.capacity
+        return self._buf[i:] + self._buf[:i]
+
+    def dropped(self) -> int:
+        """Events overwritten by ring wrap-around since the last clear."""
+        return max(0, self._n - self.capacity)
+
+    def clear(self):
+        """Drop all buffered events (the nesting stack is left alone so a
+        clear inside an open span stays consistent)."""
+        self._buf = [None] * self.capacity
+        self._n = 0
+
+
+TRACER = Tracer()
+
+
+def span(name: str, **attrs):
+    """Open a span on the default tracer."""
+    return TRACER.span(name, **attrs)
+
+
+def instant(name: str, **attrs):
+    """Record an instant event on the default tracer."""
+    TRACER.instant(name, **attrs)
+
+
+def event_dict(ev: SpanEvent) -> dict:
+    """Plain-dict form of one event (the JSONL line payload)."""
+    return {"seq": ev.seq, "parent": ev.parent, "depth": ev.depth,
+            "name": ev.name, "t0_ns": ev.t0_ns, "dur_ns": ev.dur_ns,
+            "attrs": ev.attrs or {}}
+
+
+class TraceWriter:
+    """Incremental JSONL emitter: ``drain()`` appends events recorded since
+    the previous drain (by ``seq`` high-water mark) to ``path``, one JSON
+    object per line.  Survives ring wrap — wrapped-away events are simply
+    gone, never re-written."""
+
+    def __init__(self, path: str, tracer: Tracer | None = None):
+        self.path = path
+        self.tracer = tracer if tracer is not None else TRACER
+        self._f = open(path, "a")
+        self._written_seq = -1
+
+    def drain(self) -> int:
+        """Append all new events; returns how many were written."""
+        new = [e for e in self.tracer.events() if e.seq > self._written_seq]
+        for ev in new:
+            self._f.write(json.dumps(event_dict(ev)) + "\n")
+        if new:
+            self._f.flush()
+            self._written_seq = max(e.seq for e in new)
+        return len(new)
+
+    def close(self):
+        """Final drain + close the file."""
+        self.drain()
+        self._f.close()
+
+
+def chrome_trace(events=None, tracer: Tracer | None = None) -> dict:
+    """Chrome ``trace_event``-format dict ("X" complete events, µs units)
+    from ``events`` (default: the tracer's buffer).  Span attributes land
+    in ``args``; nesting is reconstructed by the viewer from ts/dur on one
+    pid/tid, so correctly stacked spans in the source appear stacked in
+    ``chrome://tracing``."""
+    if events is None:
+        events = (tracer if tracer is not None else TRACER).events()
+    tev = []
+    for ev in sorted(events, key=lambda e: (e.t0_ns, e.seq)):
+        tev.append({
+            "name": ev.name,
+            "ph": "X",
+            "ts": ev.t0_ns / 1e3,
+            "dur": ev.dur_ns / 1e3,
+            "pid": 0,
+            "tid": 0,
+            "args": {**(ev.attrs or {}), "seq": ev.seq,
+                     "parent": ev.parent, "depth": ev.depth},
+        })
+    return {"traceEvents": tev, "displayTimeUnit": "ms"}
+
+
+def write_chrome(path: str, events=None, tracer: Tracer | None = None):
+    """Write ``chrome_trace`` JSON to ``path``; returns the event count."""
+    doc = chrome_trace(events, tracer)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return len(doc["traceEvents"])

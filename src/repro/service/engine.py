@@ -75,6 +75,9 @@ from ..core import DynamicGraph, component_labels
 from ..core import representatives as core_representatives
 from ..core.graph import GraphSpec, GraphState, lookup_edge
 from ..core.maintenance import OP_INSERT
+from ..core.peel import stats_dict as peel_stats_dict
+from ..obs import metrics as obs_metrics, profiling as obs_profiling
+from ..obs import trace as obs_trace
 from .api import (COMMUNITY, MAX_K, MEMBERS, REPRESENTATIVES, Overloaded,
                   QueryRequest, QueryResponse, WriteAck, WriteRequest)
 from ..core import index as truss_index
@@ -83,6 +86,37 @@ from .store import TrussStore
 _INF = int(truss_index._INF)  # non-member label sentinel (host-side int)
 
 _EWMA_ALPHA = 0.3  # smoothing for the adaptive-flush latency/rate estimates
+
+# registry families (get-or-create: shared with any other service in the
+# process; see docs/OBSERVABILITY.md for the catalog)
+_FLUSH_N = obs_metrics.counter(
+    "truss_flush_total", "committed generations (fused or progressive)")
+_FLUSH_SIZE = obs_metrics.histogram(
+    "truss_flush_size_records", "WAL records per committed generation",
+    buckets=obs_metrics.DEFAULT_SIZE_BUCKETS)
+_PEEL_S = obs_metrics.histogram(
+    "truss_peel_seconds",
+    "dispatch-to-land wall time of one generation's maintenance")
+_PEEL_WAVES = obs_metrics.counter(
+    "truss_peel_waves_total", "peel-engine while-loop waves")
+_PEEL_KILLS = obs_metrics.counter(
+    "truss_peel_kills_total", "edges assigned a phi by the peel engine")
+_PEEL_DELTAS = obs_metrics.counter(
+    "truss_peel_deltas_total", "scatter-subtracted support updates")
+_Q_DEPTH = obs_metrics.gauge(
+    "truss_pipeline_queue_depth",
+    "acked-but-unapplied records queued (pipeline mode)")
+_FLUSH_TARGET_G = obs_metrics.gauge(
+    "truss_pipeline_flush_target", "adaptive generation-size target")
+_SHED_N = obs_metrics.counter(
+    "truss_pipeline_shed_total",
+    "writes shed by admission control (Overloaded)")
+_GEN_G = obs_metrics.gauge("truss_committed_gen", "committed generation")
+_EDGES_G = obs_metrics.gauge(
+    "truss_edges", "active edges at the committed generation")
+_QUERY_S = obs_metrics.histogram(
+    "truss_query_seconds", "query latency by kind (flush-inclusive)",
+    labels=("kind",))
 
 
 class _Inflight(NamedTuple):
@@ -152,6 +186,50 @@ class TrussService:
         self._ewma_rate: float | None = None    # host arrival rate, records/s
         self._last_seal_t: float | None = None
         self.overloaded = 0            # writes shed by admission control
+        self._last_shed_gen: int | None = None  # committed gen at last shed
+        self._stats_seen = None  # identity of the last counted PeelStats
+        if self.pipeline:
+            _FLUSH_TARGET_G.set(self._flush_target)
+        # both constructors funnel through here with the graph built and
+        # ``gen`` set, so this is where the committed snapshot is seeded
+        self._capture_committed()
+
+    def _capture_committed(self, peel: dict | None = None):
+        """Refresh the atomic committed-state snapshot ``stats()`` serves
+        from.  Called only at generation boundaries (constructor, commit,
+        replay), where ``self.graph.state`` arrays are landed — reading
+        edge counts / max phi here can never block on an in-flight
+        dispatch the way reading them inside ``stats()`` could."""
+        if peel is None:
+            peel = peel_stats_dict(self.graph.last_peel_stats)
+        self._committed = {
+            "gen": self.gen,
+            "wal_applied": self._applied_wal,
+            "n_edges": len(self.graph._present),
+            "max_truss": self.graph.max_truss(),
+            "peel": peel,
+        }
+        _GEN_G.set(self.gen)
+        _EDGES_G.set(self._committed["n_edges"])
+
+    def _record_commit_metrics(self, n: int, dur_s: float | None) -> dict:
+        """Registry side of one committed generation; returns the peel
+        stats dict for the committed snapshot.  Peel counters advance only
+        when ``last_peel_stats`` is a *new* object — a netted no-op commit
+        leaves the previous generation's stats in place and must not
+        double-count them."""
+        _FLUSH_N.inc()
+        _FLUSH_SIZE.observe(n)
+        if dur_s is not None:
+            _PEEL_S.observe(dur_s)
+        ps = self.graph.last_peel_stats
+        d = peel_stats_dict(ps)
+        if ps is not self._stats_seen:
+            _PEEL_WAVES.inc(d["waves"])
+            _PEEL_KILLS.inc(d["kills"])
+            _PEEL_DELTAS.inc(d["deltas"])
+            self._stats_seen = ps
+        return d
 
     # -- writes ---------------------------------------------------------------
     @staticmethod
@@ -207,6 +285,10 @@ class TrussService:
             # bounded queue is full and the device is mid-generation: shed
             # load explicitly rather than stalling every later writer
             self.overloaded += 1
+            self._last_shed_gen = self.gen
+            _SHED_N.inc()
+            obs_trace.instant("pipeline.shed", gen=self.gen,
+                              queue=len(self._pending))
             retry = 1e3 * (self._ewma_gen_s or 1e-3)
             return Overloaded(retry_after_ms=retry, gen=self.gen)
         key = self._admit(self._view, op, a, b)
@@ -224,6 +306,7 @@ class TrussService:
         if self._open_count >= self._flush_target:
             self._seal()
         self._pump()
+        _Q_DEPTH.set(len(self._pending))
         return WriteAck(gen=gen, wal_index=wal_index)
 
     def _seal(self):
@@ -256,21 +339,30 @@ class TrussService:
             self._seal()
         if self.store is not None:
             self.store.fsync()  # durable before applied, exactly like flush
+        _Q_DEPTH.set(len(self._pending))
         t0 = time.perf_counter()
-        hi = self.graph.apply_batch(group, strategy=self.strategy,
-                                    defer_sync=True)
+        with obs_trace.span("gen.dispatch", gen=tag, n=n):
+            hi = self.graph.apply_batch(group, strategy=self.strategy,
+                                        defer_sync=True)
         if hi is None:
             # netted no-op or progressive path: already applied and synced —
             # commit immediately, nothing in flight
-            self._commit_generation(tag, n)
+            self._commit_generation(tag, n,
+                                    dur_s=time.perf_counter() - t0)
             return
         self._inflight = _Inflight(gen=tag, n=n, hi=hi, t0=t0)
 
-    def _commit_generation(self, gen: int, n: int):
+    def _commit_generation(self, gen: int, n: int,
+                           dur_s: float | None = None):
         """Advance the committed frontier: generation ``gen`` (``n`` WAL
-        records) has fully landed."""
+        records) has fully landed.  All commit paths (serial flush,
+        pipelined land, netted no-op dispatch, replay) funnel through here,
+        so this is where the registry counters advance and the committed
+        stats snapshot refreshes."""
         self.gen = gen
         self._applied_wal += n
+        peel = self._record_commit_metrics(n, dur_s)
+        self._capture_committed(peel)
         if self.store is not None:
             self.store.publish_commit(self.gen, self._applied_wal)
 
@@ -291,10 +383,12 @@ class TrussService:
         # int(hi) blocks until the whole fused executable (phi included —
         # one jit call, one executable) has landed, then the deferred index
         # invalidation runs before any query can read labels
-        self.graph.index.invalidate(2, max(int(inf.hi), 1))
-        dt = time.perf_counter() - inf.t0
-        self._inflight = None
-        self._commit_generation(inf.gen, inf.n)
+        with obs_trace.span("gen.land", gen=inf.gen, n=inf.n) as sp:
+            self.graph.index.invalidate(2, max(int(inf.hi), 1))
+            dt = time.perf_counter() - inf.t0
+            self._inflight = None
+            self._commit_generation(inf.gen, inf.n, dur_s=dt)
+            sp.set(**self._committed["peel"])
         self._observe_gen_latency(dt)
         return True
 
@@ -316,6 +410,7 @@ class TrussService:
         if self._ewma_gen_s * 1e3 > float(self.target_p99_ms):
             need *= 2
         self._flush_target = int(min(max(need, 1), self.max_pending))
+        _FLUSH_TARGET_G.set(self._flush_target)
 
     def _pump(self):
         """Non-blocking pipeline advance: land the in-flight generation if
@@ -442,22 +537,29 @@ class TrussService:
         in WAL order.  This is the read barrier every query takes, so reads
         keep happening at generation boundaries with read-your-writes."""
         if self.pipeline:
-            self._complete(wait=True)
-            while self._pending:
-                self._dispatch_next()
-                self._complete(wait=True)
+            if self._inflight is None and not self._pending:
+                return self.gen
+            with obs_trace.span("flush", mode="drain",
+                                pending=len(self._pending)):
+                with obs_profiling.profile_region("flush"):
+                    self._complete(wait=True)
+                    while self._pending:
+                        self._dispatch_next()
+                        self._complete(wait=True)
+            _Q_DEPTH.set(0)
             return self.gen
         if not self._pending:
             return self.gen
-        if self.store is not None:
-            self.store.fsync()
-        self.graph.apply_batch(self._pending, strategy=self.strategy)
-        n_applied = len(self._pending)
-        self._pending = []
-        self.gen += 1
-        self._applied_wal += n_applied
-        if self.store is not None:
-            self.store.publish_commit(self.gen, self._applied_wal)
+        with obs_trace.span("flush", mode="serial", n=len(self._pending)):
+            with obs_profiling.profile_region("flush"):
+                if self.store is not None:
+                    self.store.fsync()
+                t0 = time.perf_counter()
+                self.graph.apply_batch(self._pending, strategy=self.strategy)
+                n_applied = len(self._pending)
+                self._pending = []
+                self._commit_generation(self.gen + 1, n_applied,
+                                        dur_s=time.perf_counter() - t0)
         return self.gen
 
     # -- queries (read-your-writes: flush first) ------------------------------
@@ -511,6 +613,15 @@ class TrussService:
 
     def handle(self, req: QueryRequest) -> QueryResponse:
         """Dispatch one typed query (the CLI/benchmark entry point)."""
+        t0 = time.perf_counter()
+        try:
+            with obs_trace.span("query", kind=str(req.kind), k=req.k):
+                return self._handle(req)
+        finally:
+            _QUERY_S.labels(kind=str(req.kind)).observe(
+                time.perf_counter() - t0)
+
+    def _handle(self, req: QueryRequest) -> QueryResponse:
         if req.kind == MEMBERS:
             edges = self.k_truss_members(req.k)
         elif req.kind == COMMUNITY:
@@ -636,9 +747,11 @@ class TrussService:
 
         def commit_group():
             nonlocal groups, group, group_gen
-            self.graph.apply_batch(group, strategy=self.strategy)
-            self.gen = group_gen
-            self._applied_wal += len(group)
+            t0 = time.perf_counter()
+            with obs_trace.span("gen.replay", gen=group_gen, n=len(group)):
+                self.graph.apply_batch(group, strategy=self.strategy)
+            self._commit_generation(group_gen, len(group),
+                                    dur_s=time.perf_counter() - t0)
             groups += 1
             group, group_gen = [], None
 
@@ -657,15 +770,27 @@ class TrussService:
 
     # -- introspection --------------------------------------------------------
     def stats(self) -> dict:
-        """Operational counters: generations, WAL frontiers, peel + pipeline state."""
+        """Operational counters: generations, WAL frontiers, peel + pipeline
+        state.  Array-derived fields (``n_edges``, ``max_truss``, ``peel``,
+        ``gen``) come from the snapshot captured at the last *committed*
+        generation boundary — never from the live state, whose arrays may
+        belong to a dispatched-but-unlanded generation (reading those would
+        block the pipeline, and counting ``graph._present`` mid-flight
+        reported effects of an uncommitted batch).  ``counters`` mirrors
+        the process-wide registry (shared across services in one process);
+        the full catalog is in docs/OBSERVABILITY.md."""
+        c = self._committed
         out = {
-            "gen": self.gen,
-            "n_edges": len(self.graph._present),
+            "gen": c["gen"],
+            "n_edges": c["n_edges"],
             "pending": len(self._pending),
+            "pending_queue_depth": len(self._pending),
+            "last_shed_gen": self._last_shed_gen,
             "wal_len": self.store.wal_len if self.store else 0,
-            "wal_applied": self._applied_wal,
+            "wal_applied": c["wal_applied"],
             "tracked_ks": tuple(self.graph.index.tracked),
-            "max_truss": self.graph.max_truss(),
+            "max_truss": c["max_truss"],
+            "peel": dict(c["peel"]),
         }
         if self.store is not None:
             # replication lag per tailer, from the lease files the replicas
@@ -674,18 +799,20 @@ class TrussService:
             if leases:
                 out["replicas"] = {
                     rid: {"gen": int(m.get("gen", 0)),
-                          "lag_gens": self.gen - int(m.get("gen", 0)),
+                          "lag_gens": c["gen"] - int(m.get("gen", 0)),
                           "lag_records":
-                              self._applied_wal - int(m.get("wal_applied", 0))}
+                              c["wal_applied"] - int(m.get("wal_applied", 0))}
                     for rid, m in leases.items()}
-        # peel cost of the last fused flush (absent after progressive
-        # flushes, which run Algorithms 1/2 instead of a re-peel); skipped
-        # while a generation is in flight — the stats arrays belong to the
-        # dispatched executable and reading them would block the pipeline
-        ps = self.graph.last_peel_stats
-        if ps is not None and self._inflight is None:
-            out["peel"] = {"waves": int(ps.waves), "kills": int(ps.kills),
-                           "deltas": int(ps.deltas)}
+        reg = obs_metrics.REGISTRY
+        out["counters"] = {
+            "flushes": reg.value("truss_flush_total"),
+            "fsyncs": reg.value("truss_wal_fsync_total"),
+            "wal_records": reg.value("truss_wal_append_records_total"),
+            "peel_waves": reg.value("truss_peel_waves_total"),
+            "sheds": reg.value("truss_pipeline_shed_total"),
+            "progressive_updates":
+                reg.value("truss_progressive_updates_total"),
+        }
         if self.pipeline:
             out["pipeline"] = {
                 "flush_target": self._flush_target,

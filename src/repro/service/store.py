@@ -52,7 +52,19 @@ import os
 import tempfile
 import time
 
+from ..obs import metrics as obs_metrics, trace as obs_trace
 from ..training import checkpoint
+
+_APPEND_S = obs_metrics.histogram(
+    "truss_wal_append_seconds", "WAL append latency per append call")
+_APPEND_RECS = obs_metrics.counter(
+    "truss_wal_append_records_total", "records appended to the WAL")
+_FSYNC_S = obs_metrics.histogram(
+    "truss_wal_fsync_seconds", "WAL fsync latency (real syncs only)")
+_FSYNC_N = obs_metrics.counter(
+    "truss_wal_fsync_total", "real WAL fsyncs (dirty-skip no-ops excluded)")
+_SNAP_N = obs_metrics.counter(
+    "truss_snapshot_total", "snapshots checkpointed (each compacts the WAL)")
 
 _SNAPSHOT = "snapshot.npz"
 _WAL = "wal.log"
@@ -155,10 +167,13 @@ class TrussStore:
         self._check_writable()
         start = self.wal_len
         offset = self._wal_f.tell()
+        t0 = time.perf_counter()
         try:
-            for gen, op, a, b in records:
-                self._wal_f.write(f"{int(gen)} {int(op)} {int(a)} {int(b)}\n")
-            self._wal_f.flush()
+            with obs_trace.span("wal.append", n=len(records)):
+                for gen, op, a, b in records:
+                    self._wal_f.write(
+                        f"{int(gen)} {int(op)} {int(a)} {int(b)}\n")
+                self._wal_f.flush()
         except Exception:
             try:
                 self._wal_f.close()
@@ -170,6 +185,8 @@ class TrussStore:
             self._tail_cache = None  # offsets past the truncation are invalid
             raise
         self.wal_len += len(records)
+        _APPEND_S.observe(time.perf_counter() - t0)
+        _APPEND_RECS.inc(len(records))
         return start
 
     def fsync(self):
@@ -180,8 +197,13 @@ class TrussStore:
         self._check_writable()
         if self._synced_len == self.wal_len:
             return
-        os.fsync(self._wal_f.fileno())
+        t0 = time.perf_counter()
+        with obs_trace.span("wal.fsync",
+                            n=self.wal_len - self._synced_len):
+            os.fsync(self._wal_f.fileno())
         self._synced_len = self.wal_len
+        _FSYNC_S.observe(time.perf_counter() - t0)
+        _FSYNC_N.inc()
 
     def read_wal(self, start: int = 0,
                  stop: int | None = None) -> list[tuple[int, int, int, int]]:
@@ -290,10 +312,12 @@ class TrussStore:
         the new header are fsynced *before* the old WAL prefix is dropped —
         a power failure can never lose both."""
         self._check_writable()
-        checkpoint.save(self.snap_path, tree)
-        self._fsync_path(self.snap_path)
-        self._fsync_path(self.root)  # persist checkpoint.save's rename
-        self._compact(self.wal_len)
+        with obs_trace.span("store.snapshot", wal_len=self.wal_len):
+            checkpoint.save(self.snap_path, tree)
+            self._fsync_path(self.snap_path)
+            self._fsync_path(self.root)  # persist checkpoint.save's rename
+            self._compact(self.wal_len)
+        _SNAP_N.inc()
 
     def _compact(self, base: int):
         self._wal_f.close()

@@ -1,0 +1,371 @@
+"""Tier-1 tests for the observability plane (ISSUE-7).
+
+Four layers, mirroring ``src/repro/obs``:
+
+* registry unit behavior — get-or-create families, labels, snapshot/reset
+  in place, the ``disabled()`` gate;
+* trace unit behavior — deterministic nesting/attrs with a fake clock,
+  ring wrap, JSONL + Chrome export;
+* exposition — Prometheus render/parse round trip, live HTTP scrape;
+* integration — ``last_peel_stats`` never ``None`` on any maintenance
+  path, ``stats()`` serving the *committed* snapshot while a generation is
+  in flight, shed accounting, counter monotonicity across crash-restore,
+  and the structural nesting of a pipelined run's Chrome trace (the ISSUE
+  acceptance artifact).
+
+The registry and default tracer are process-global, so integration tests
+assert **deltas**, never absolutes.
+"""
+import json
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import DynamicGraph
+from repro.core.maintenance import OP_DELETE, OP_INSERT
+from repro.core.peel import EMPTY_STATS, stats_dict
+from repro.obs import expo, metrics, trace
+from repro.obs.metrics import Registry
+from repro.obs.trace import Tracer, TraceWriter, chrome_trace
+from repro.service import Overloaded, TrussService, TrussStore, WriteAck
+from repro.service.engine import _Inflight
+
+N = 13
+D_MAX = 16
+E_CAP = 160
+
+EDGES = [(0, 1), (1, 2), (0, 2), (2, 3), (1, 3), (0, 3), (3, 4), (4, 5)]
+
+
+def _svc(tmp_path, **kw):
+    kw.setdefault("d_max", D_MAX)
+    kw.setdefault("e_cap", E_CAP)
+    return TrussService(N, EDGES, store=TrussStore(str(tmp_path / "store")),
+                        **kw)
+
+
+# -- registry -----------------------------------------------------------------
+def test_registry_families_and_labels():
+    reg = Registry()
+    c = reg.counter("c_total", "help text")
+    c.inc()
+    c.inc(3)
+    assert c.value == 4
+    # get-or-create: same object back, mismatches rejected
+    assert reg.counter("c_total") is c
+    with pytest.raises(ValueError):
+        reg.gauge("c_total")
+    with pytest.raises(ValueError):
+        reg.counter("c_total", labels=("x",))
+    lab = reg.counter("routed_total", labels=("policy", "node"))
+    lab.labels(policy="strong", node="primary").inc()
+    lab.labels(policy="bounded", node="r1").inc(2)
+    with pytest.raises(ValueError):
+        lab.labels(policy="strong")  # missing a declared label
+    with pytest.raises(ValueError):
+        lab.inc()  # labeled family has no implicit child
+    assert reg.value("routed_total") == 3
+    assert reg.value("never_created", default=-1) == -1
+    g = reg.gauge("depth")
+    g.set(7)
+    g.inc(-2)
+    assert g.value == 5
+
+
+def test_registry_histogram_and_snapshot_reset_in_place():
+    reg = Registry()
+    h = reg.histogram("lat_seconds", buckets=(0.001, 0.01, 0.1))
+    for v in (0.0005, 0.005, 0.05, 5.0):
+        h.observe(v)
+    snap = reg.snapshot()["lat_seconds"]
+    assert snap["type"] == "histogram"
+    vals = snap["values"][()]
+    assert vals["buckets"] == [1, 1, 1, 1]  # one per bucket + overflow
+    assert vals["count"] == 4
+    assert vals["sum"] == pytest.approx(5.0555)
+    # reset zeroes in place: the pre-reset reference keeps working
+    reg.reset()
+    assert reg.snapshot()["lat_seconds"]["values"][()]["count"] == 0
+    h.observe(0.02)
+    assert reg.snapshot()["lat_seconds"]["values"][()]["buckets"] == [0, 0, 1, 0]
+
+
+def test_disabled_gates_metrics_and_spans():
+    reg = Registry()
+    c = reg.counter("gated_total")
+    tr = Tracer(capacity=8, clock=iter(range(100)).__next__)
+    assert obs.is_enabled()
+    with obs.disabled():
+        assert not obs.is_enabled()
+        c.inc()
+        reg.gauge("gated_gauge").set(9)
+        reg.histogram("gated_hist").observe(1.0)
+        sp = tr.span("nothing")
+        with sp:
+            sp.set(x=1)
+        tr.instant("nothing")
+    assert obs.is_enabled()
+    assert c.value == 0
+    assert reg.value("gated_gauge") == 0
+    assert tr.events() == []
+
+
+# -- trace --------------------------------------------------------------------
+def test_span_nesting_attrs_and_instants_fake_clock():
+    t = iter(range(0, 1000, 10))
+    tr = Tracer(capacity=64, clock=lambda: next(t))
+    with tr.span("outer", phase="a") as outer:
+        with tr.span("inner") as inner:
+            inner.set(waves=3, kills=7)
+        tr.instant("shed", gen=4)
+        outer.set(done=True)
+    evs = tr.events()
+    assert [e.name for e in evs] == ["inner", "shed", "outer"]  # completion order
+    inner_ev, shed_ev, outer_ev = evs
+    assert outer_ev.seq == 0 and outer_ev.parent == -1 and outer_ev.depth == 0
+    assert inner_ev.parent == outer_ev.seq and inner_ev.depth == 1
+    assert shed_ev.parent == outer_ev.seq and shed_ev.dur_ns == 0
+    assert inner_ev.attrs == {"waves": 3, "kills": 7}
+    assert outer_ev.attrs == {"phase": "a", "done": True}
+    # fake clock: outer strictly contains inner
+    assert outer_ev.t0_ns < inner_ev.t0_ns
+    assert outer_ev.t0_ns + outer_ev.dur_ns > inner_ev.t0_ns + inner_ev.dur_ns
+
+
+def test_ring_wrap_keeps_newest_and_counts_dropped():
+    tr = Tracer(capacity=4, clock=iter(range(1000)).__next__)
+    for i in range(7):
+        with tr.span(f"s{i}"):
+            pass
+    assert tr.dropped() == 3
+    assert [e.name for e in tr.events()] == ["s3", "s4", "s5", "s6"]
+    tr.clear()
+    assert tr.events() == [] and tr.dropped() == 0
+
+
+def test_jsonl_and_chrome_export(tmp_path):
+    tr = Tracer(capacity=16, clock=iter(range(0, 10000, 5)).__next__)
+    w = TraceWriter(str(tmp_path / "t.jsonl"), tracer=tr)
+    with tr.span("a", k=3):
+        with tr.span("b"):
+            pass
+    assert w.drain() == 2
+    with tr.span("c"):
+        pass
+    assert w.drain() == 1  # incremental: only the new event
+    w.close()
+    lines = [json.loads(s) for s in
+             (tmp_path / "t.jsonl").read_text().splitlines()]
+    assert [d["name"] for d in lines] == ["b", "a", "c"]
+    assert lines[1]["attrs"] == {"k": 3}
+    doc = chrome_trace(tracer=tr)
+    names = [e["name"] for e in doc["traceEvents"]]
+    assert names == ["a", "b", "c"]  # start-time order, not completion order
+    for e in doc["traceEvents"]:
+        assert e["ph"] == "X" and e["pid"] == 0 and e["tid"] == 0
+        assert set(e["args"]) >= {"seq", "parent", "depth"}
+
+
+# -- exposition ---------------------------------------------------------------
+def _normalize(snap):
+    """Label order differs between a declared schema and a parsed text page
+    (sorted); compare label-set keyed values."""
+    out = {}
+    for name, fam in snap.items():
+        vals = {}
+        for key, v in fam["values"].items():
+            pairs = frozenset(zip(fam["labelnames"], key))
+            vals[pairs] = v
+        out[name] = {"type": fam["type"], "values": vals}
+    return out
+
+
+def test_render_parse_round_trip():
+    reg = Registry()
+    reg.counter("rt_total", "a counter").inc(5)
+    reg.gauge("rt_depth", "a gauge").set(2.5)
+    lab = reg.counter("rt_routed_total", labels=("policy", "node"))
+    lab.labels(policy="strong", node="primary").inc(4)
+    h = reg.histogram("rt_lat_seconds", buckets=(0.01, 0.1))
+    h.observe(0.005)
+    h.observe(0.05)
+    h.observe(9.0)
+    text = expo.render(reg)
+    assert "# TYPE rt_lat_seconds histogram" in text
+    assert 'rt_routed_total{policy="strong",node="primary"} 4' in text
+    assert _normalize(expo.parse(text)) == _normalize(reg.snapshot())
+    with pytest.raises(ValueError):
+        expo.parse("rt_bad{unclosed 3\n")
+
+
+def test_metrics_server_scrape(tmp_path):
+    delta0 = metrics.REGISTRY.value("truss_flush_total")
+    svc = _svc(tmp_path, flush_every=2)
+    for i in range(5, 9):
+        svc.submit(OP_INSERT, i, i + 2)
+    srv = expo.MetricsServer(port=0)
+    srv.start()
+    try:
+        url = f"http://127.0.0.1:{srv.port}/metrics"
+        with urllib.request.urlopen(url) as r:
+            assert r.status == 200
+            assert r.headers["Content-Type"] == expo.CONTENT_TYPE
+            page = r.read().decode()
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(f"http://127.0.0.1:{srv.port}/nope")
+    finally:
+        srv.stop()
+    snap = expo.parse(page)
+    # the metric families the serving stack registers are all exposed
+    for fam in ("truss_flush_total", "truss_wal_append_seconds",
+                "truss_wal_fsync_total", "truss_peel_seconds",
+                "truss_committed_gen", "truss_edges"):
+        assert fam in snap, fam
+    assert snap["truss_flush_total"]["values"][()] - delta0 >= 2
+
+
+# -- integration: peel stats on every path ------------------------------------
+def test_last_peel_stats_never_none():
+    g = DynamicGraph(N, EDGES, d_max=D_MAX, e_cap=E_CAP)
+    assert g.last_peel_stats is not None
+    d0 = stats_dict(g.last_peel_stats)
+    assert d0["waves"] >= 1 and d0["frontier"] >= 1  # real decompose stats
+    g.insert(7, 9)                       # Algorithm 2 path
+    assert stats_dict(g.last_peel_stats) == stats_dict(EMPTY_STATS)
+    g.delete(7, 9)                       # Algorithm 1 path
+    assert stats_dict(g.last_peel_stats) == stats_dict(EMPTY_STATS)
+    g.apply_batch([(OP_INSERT, 7, 9), (OP_INSERT, 8, 10)], strategy="fused")
+    df = stats_dict(g.last_peel_stats)
+    assert all(isinstance(v, int) and v >= 0 for v in df.values())
+    g2 = DynamicGraph.from_state(g.spec, g.state)
+    assert stats_dict(g2.last_peel_stats) == stats_dict(EMPTY_STATS)
+
+
+def test_stats_serves_committed_snapshot_in_flight(tmp_path):
+    svc = _svc(tmp_path, pipeline=True, flush_every=64, max_pending=64,
+               strategy="fused")
+    n0 = svc.stats()["n_edges"]
+    assert svc.stats()["gen"] == 0
+    assert svc.stats()["pending_queue_depth"] == 0
+    for i in range(5, 10):
+        ack = svc.submit(OP_INSERT, i, i + 3)
+        assert isinstance(ack, WriteAck)
+    assert svc.stats()["pending_queue_depth"] == 5
+    # force a dispatch WITHOUT landing it: the live graph state now belongs
+    # to the in-flight generation, but stats() must keep reporting the
+    # committed one (this is exactly the race the old implementation had)
+    svc._seal()
+    svc._dispatch_next()
+    assert svc._inflight is not None
+    assert len(svc.graph._present) == n0 + 5  # live state moved...
+    mid = svc.stats()
+    assert mid["gen"] == 0                     # ...committed view did not
+    assert mid["n_edges"] == n0
+    assert mid["pending_queue_depth"] == 0
+    assert mid["last_shed_gen"] is None
+    assert mid["peel"] == svc._committed["peel"]
+    svc.flush()
+    end = svc.stats()
+    assert end["gen"] == 1 and end["n_edges"] == n0 + 5
+    assert end["peel"]["frontier"] >= 1        # the landed re-peel's stats
+
+
+def test_shed_records_gen_and_counter(tmp_path):
+    svc = _svc(tmp_path, pipeline=True, flush_every=4, max_pending=4,
+               strategy="fused")
+    sheds0 = metrics.REGISTRY.value("truss_pipeline_shed_total")
+
+    class _NeverReady:
+        def is_ready(self):
+            return False
+
+    # park a fake unlandable generation and fill the queue: the next submit
+    # must shed deterministically (no device-timing dependence)
+    svc._inflight = _Inflight(gen=1, n=0, hi=_NeverReady(), t0=0.0)
+    svc._pending = [(svc._open_gen, OP_INSERT, 5, 7 + i) for i in range(4)]
+    ack = svc.submit(OP_INSERT, 5, 12)
+    assert isinstance(ack, Overloaded)
+    assert svc.overloaded == 1
+    st = svc.stats()
+    assert st["last_shed_gen"] == 0
+    assert st["counters"]["sheds"] - sheds0 == 1
+    assert metrics.REGISTRY.value("truss_pipeline_shed_total") - sheds0 == 1
+    ev = [e for e in trace.TRACER.events() if e.name == "pipeline.shed"]
+    assert ev and ev[-1].attrs["gen"] == 0
+    svc._inflight, svc._pending = None, []  # unpark before teardown
+
+
+def test_counters_monotonic_across_crash_restore(tmp_path):
+    reg = metrics.REGISTRY
+    flushes0 = reg.value("truss_flush_total")
+    recs0 = reg.value("truss_wal_append_records_total")
+    root = str(tmp_path / "store")
+    svc = _svc(tmp_path, flush_every=4)
+    for i in range(5, 13):
+        svc.submit(OP_INSERT, 1, i)      # 8 records -> 2 serial flushes
+    assert reg.value("truss_flush_total") - flushes0 == 2
+    assert reg.value("truss_wal_append_records_total") - recs0 == 8
+    before = svc.stats()
+    del svc                              # crash: no snapshot of the tail
+    restored = TrussService.restore(TrussStore(root), flush_every=4)
+    assert restored.stats()["gen"] == before["gen"]
+    assert restored.stats()["n_edges"] == before["n_edges"]
+    # replay re-commits exactly the 2 WAL groups: the flush counter moves
+    # monotonically by the group count, and nothing is re-appended
+    assert reg.value("truss_flush_total") - flushes0 == 4
+    assert reg.value("truss_wal_append_records_total") - recs0 == 8
+
+
+# -- acceptance: pipelined run's chrome trace is well-nested ------------------
+def _assert_well_nested(trace_events):
+    """Stack-simulate over (ts, dur): every event must lie entirely within
+    the enclosing open event — partial overlap means broken nesting."""
+    stack = []
+    for e in sorted(trace_events, key=lambda e: (e["ts"], -e["dur"])):
+        while stack and e["ts"] >= stack[-1]["ts"] + stack[-1]["dur"]:
+            stack.pop()
+        if stack:
+            top = stack[-1]
+            assert e["ts"] + e["dur"] <= top["ts"] + top["dur"] + 1e-9, \
+                (e["name"], top["name"])
+        stack.append(e)
+
+
+def test_pipelined_chrome_trace_nesting(tmp_path):
+    trace.TRACER.clear()
+    svc = _svc(tmp_path, pipeline=True, flush_every=4, max_pending=64,
+               strategy="fused")
+    rng = np.random.default_rng(3)
+    present = set(map(tuple, EDGES))
+    for _ in range(14):
+        while True:
+            a, b = sorted(int(x) for x in rng.integers(0, N, size=2))
+            if a != b and (a, b) not in present:
+                break
+        present.add((a, b))
+        svc.submit(OP_INSERT, a, b)
+    svc.flush()
+    out = str(tmp_path / "trace.json")
+    trace.write_chrome(out, tracer=trace.TRACER)
+    doc = json.load(open(out))           # the artifact itself loads
+    evs = doc["traceEvents"]
+    names = {e["name"] for e in evs}
+    assert {"flush", "gen.dispatch", "gen.land", "wal.append",
+            "wal.fsync"} <= names, names
+    _assert_well_nested(evs)
+    # per generation: dispatch happens-before land, and the landed span
+    # carries the peel stats as attributes
+    dispatches = {e["args"]["gen"]: e for e in evs
+                  if e["name"] == "gen.dispatch"}
+    lands = {e["args"]["gen"]: e for e in evs if e["name"] == "gen.land"}
+    assert lands and set(lands) <= set(dispatches)
+    for gen, land in lands.items():
+        assert dispatches[gen]["ts"] <= land["ts"], gen
+        assert {"waves", "kills", "deltas", "frontier"} <= set(land["args"])
+    # the drain's dispatch/land run inside the flush barrier span
+    raw = trace.TRACER.events()
+    flush_seqs = {e.seq for e in raw if e.name == "flush"}
+    assert any(e.parent in flush_seqs for e in raw
+               if e.name in ("gen.dispatch", "gen.land"))
