@@ -61,14 +61,16 @@ OUT_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 
 
 def _drive(edges, n_nodes, *, pipeline, ticks, chunk, read_frac, ks,
-           flush_every, target_p99_ms, max_pending, seed=5):
+           flush_every, target_p99_ms, max_pending, seed=5,
+           checksum=True):
     """One mode over the fixed workload.  Returns throughput/latency
     aggregates; wall time covers the whole drive including the final
     drain, so 'sustained' means every peel the writes caused is paid."""
     tel0 = {k: obs_metrics.REGISTRY.value(n) for k, n in _TELEMETRY.items()}
     with tempfile.TemporaryDirectory() as root:
         svc = TrussService(n_nodes, edges, tracked_ks=ks,
-                           flush_every=flush_every, store=TrussStore(root),
+                           flush_every=flush_every,
+                           store=TrussStore(root, checksum=checksum),
                            pipeline=pipeline, target_p99_ms=target_p99_ms,
                            max_pending=max_pending)
         wl = MixedWorkloadStream(edges, n_nodes, chunk=chunk,

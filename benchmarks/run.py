@@ -29,18 +29,19 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: truss,batch,peel,service,cluster,"
                          "pipeline,affected,kernels,distributed,sharded,"
-                         "roofline,obs")
+                         "roofline,obs,chaos")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import (affected_set, batch_update, cluster_scaling,
-                            distributed_bench, ingest_pipeline,
-                            kernels_bench, obs_overhead, peel_engine,
-                            roofline, service_throughput, sharded_peel,
-                            truss_maintenance)
+    from benchmarks import (affected_set, batch_update, chaos_availability,
+                            cluster_scaling, distributed_bench,
+                            ingest_pipeline, kernels_bench, obs_overhead,
+                            peel_engine, roofline, service_throughput,
+                            sharded_peel, truss_maintenance)
 
     selected = set((args.only or
                     "truss,batch,peel,service,cluster,pipeline,affected,"
-                    "kernels,distributed,sharded,roofline,obs").split(","))
+                    "kernels,distributed,sharded,roofline,obs,"
+                    "chaos").split(","))
     rows: list = []
     if "truss" in selected:
         print("== truss maintenance (paper Figs. 8-10) ==")
@@ -78,6 +79,9 @@ def main() -> None:
     if "obs" in selected:
         print("== observability overhead A/B (ISSUE-7) ==")
         obs_overhead.main(rows, quick=not args.full)
+    if "chaos" in selected:
+        print("== chaos availability + checksum overhead (ISSUE-8) ==")
+        chaos_availability.main(rows, quick=not args.full)
 
     import jax
     ndev_default = jax.device_count()

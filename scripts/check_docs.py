@@ -32,7 +32,7 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "src"))
 
-COVERED_PKGS = ("service", "cluster", "core", "obs")
+COVERED_PKGS = ("service", "cluster", "core", "obs", "faults")
 DOC_FILES = ["README.md"] + sorted(
     os.path.join("docs", f) for f in os.listdir(os.path.join(REPO, "docs"))
     if f.endswith(".md")) if os.path.isdir(os.path.join(REPO, "docs")) else ["README.md"]

@@ -6,7 +6,8 @@ smoke (4 emulated devices in a subprocess: decompose + fused batch bitwise
 vs the single-device engine and the oracle), and an obs smoke (serve_truss
 subprocess with --metrics-port/--trace-out: scrape /metrics mid-run, parse
 it, assert the serving metric families; the exit trace must load as Chrome
-JSON).
+JSON), and a chaos smoke (sticky fsync EIO mid-run: writes shed, committed
+reads keep serving, then clean recovery bitwise vs the oracle).
 
     python scripts/smoke_core.py              # everything
     python scripts/smoke_core.py obs          # one section
@@ -286,6 +287,75 @@ def smoke_obs(ticks=4, seed=0):
           f"{len(doc['traceEvents'])} trace spans)")
 
 
+def smoke_chaos(n_updates=36, seed=0):
+    """Chaos plane, end to end: ingest under a healthy store, inject a
+    sticky fsync EIO mid-run (writes shed with a reason, committed reads
+    keep answering at the pre-fault state), then clear the fault and
+    verify clean recovery — breaker closed, pending writes committed,
+    phi bitwise vs the oracle replay of the surviving WAL, scrub clean."""
+    import time
+    from repro.data.streams import GraphUpdateStream
+    from repro.faults import CircuitBreaker, Fault, FaultyIO, RetryPolicy
+    from repro.service import (MEMBERS, Overloaded, QueryRequest,
+                               TrussService, TrussStore)
+
+    rng = np.random.default_rng(seed)
+    n = 24
+    edges = rand_graph(rng, n, 0.25)
+    stream = GraphUpdateStream(np.asarray(edges), n, chunk=6, seed=seed + 1)
+    fio = FaultyIO()
+    with tempfile.TemporaryDirectory() as root:
+        svc = TrussService(n, edges, tracked_ks=(3,), flush_every=6,
+                           store=TrussStore(root, io=fio),
+                           breaker=CircuitBreaker(failure_threshold=2,
+                                                  cooldown_s=0.05),
+                           retry=RetryPolicy(max_attempts=2, base_ms=0.01,
+                                             cap_ms=0.01, scope="fsync"))
+        for _ in range(n_updates // 12):  # healthy warmup
+            svc.submit_many([tuple(map(int, r)) for r in stream.next()])
+        svc.flush()
+        baseline = svc.handle_committed(QueryRequest(MEMBERS, k=3)).value
+
+        fio.inject(Fault("fsync_eio", at=0, sticky=True))
+        shed = 0
+        for _ in range(n_updates // 12):
+            for r in stream.next():
+                try:
+                    ack = svc.submit(*map(int, r))
+                except (OSError, ValueError):
+                    continue
+                shed += isinstance(ack, Overloaded)
+        try:
+            svc.flush()
+        except OSError:
+            pass
+        s = svc.stats()
+        assert s["degraded"] == "io", s  # outage detected, reason surfaced
+        # degraded reads: committed state keeps answering during the outage
+        assert svc.handle_committed(
+            QueryRequest(MEMBERS, k=3)).value == baseline
+
+        fio.clear()
+        for _ in range(20):  # cooldown -> half-open probe -> closed
+            time.sleep(0.08)
+            try:
+                svc.flush()
+            except OSError:
+                continue
+            s = svc.stats()
+            if s["degraded"] is None and s["breaker"]["state"] == "closed":
+                break
+        assert s["degraded"] is None and s["breaker"]["state"] == "closed", s
+        survivors = svc.store.read_wal(start=0)
+        orc = oracle.Oracle(n, edges)
+        orc.apply([(int(op), int(a), int(b)) for _g, op, a, b in survivors])
+        assert svc.graph.phi_dict() == orc.phi, "recovered phi != oracle"
+        assert svc.scrub(deep=True)["ok"], "post-recovery scrub not clean"
+        svc.store.close()
+    print(f"chaos smoke ok (outage shed {shed} writes, degraded reads "
+          f"served, recovery exact over {len(survivors)} WAL records)")
+
+
 def smoke_core():
     """The original per-seed engine-vs-oracle sweep."""
     for s in range(15):
@@ -295,7 +365,7 @@ def smoke_core():
 
 SECTIONS = {"core": smoke_core, "service": smoke_service,
             "cluster": smoke_cluster, "sharded": smoke_sharded,
-            "obs": smoke_obs}
+            "obs": smoke_obs, "chaos": smoke_chaos}
 
 if __name__ == "__main__":
     picked = sys.argv[1:] or list(SECTIONS)

@@ -34,10 +34,12 @@ serving primary.
 """
 from __future__ import annotations
 
+import time
+
 from ..obs import metrics as obs_metrics, trace as obs_trace
 from ..service.api import QueryRequest, QueryResponse
 from ..service.engine import TrussService
-from ..service.store import TrussStore
+from ..service.store import TrussStore, WalCorruptionError
 
 _LAG_GENS = obs_metrics.gauge(
     "truss_replica_lag_gens",
@@ -62,7 +64,8 @@ class Replica:
     def __init__(self, root: str, replica_id: str = "replica-0", *,
                  flush_every: int = 16, strategy: str = "auto",
                  indexed: bool = True, support_method: str = "sorted",
-                 mesh=None):
+                 mesh=None, heartbeat_s: float | None = None,
+                 clock=time.monotonic):
         self.store = TrussStore(root, readonly=True)
         self.replica_id = replica_id
         # strategy/support_method must match the primary's for bitwise
@@ -73,6 +76,12 @@ class Replica:
         self._kw = dict(flush_every=flush_every, strategy=strategy,
                         indexed=indexed, support_method=support_method,
                         mesh=mesh)
+        # heartbeat_s: refresh the lease file even on a quiet WAL so the
+        # router's stale-lease eviction can tell "caught up and idle" from
+        # "wedged"; None keeps the old frontier-change-only writes
+        self.heartbeat_s = heartbeat_s
+        self._clock = clock
+        self.last_poll_t = clock()
         self.svc: TrussService | None = None
         self._install_snapshot()
         self._publish()
@@ -102,13 +111,20 @@ class Replica:
 
     def _publish(self):
         """Refresh the lease file, skipping the write when the applied
-        frontier has not moved (polls on a quiet WAL stay read-only)."""
+        frontier has not moved (polls on a quiet WAL stay read-only) —
+        unless ``heartbeat_s`` has elapsed since the last write, in which
+        case the lease is re-stamped anyway so liveness and staleness stay
+        distinguishable."""
         frontier = (self.gen, self.wal_applied)
-        if getattr(self, "_published", None) == frontier:
+        now = self._clock()
+        if (getattr(self, "_published", None) == frontier
+                and (self.heartbeat_s is None
+                     or now - self._published_t < self.heartbeat_s)):
             return
         self.store.publish_replica(self.replica_id, {
-            "gen": self.gen, "wal_applied": self.wal_applied})
+            "gen": self.gen, "wal_applied": self.wal_applied, "ts": now})
         self._published = frontier
+        self._published_t = now
 
     # -- replication ---------------------------------------------------------
     def poll(self, max_gens: int | None = None) -> int:
@@ -119,7 +135,15 @@ class Replica:
         are applied this call (used by the crash tests to park the replica
         mid-tail); the applied frontier only ever advances at group
         boundaries, so a partial poll is always resumable.  Returns the
-        applied generation."""
+        applied generation.
+
+        A checksum failure in the committed prefix is **loud**: records the
+        primary promised complete (below ``commit.json``'s frontier) that
+        cannot be read back mean this replica can never reach the frontier
+        honestly, so ``WalCorruptionError`` propagates instead of silently
+        serving a diverged state.  Corruption *above* the frontier is
+        invisible here by construction — ``poll`` never reads past it."""
+        self.last_poll_t = self._clock()
         commit = self.store.read_commit()
         if commit is None or (max_gens is not None and max_gens <= 0):
             self._publish()          # primary has not committed anything yet
@@ -139,6 +163,13 @@ class Replica:
                     self._install_snapshot()
                     tail = self.store.read_wal(start=self.wal_applied,
                                                stop=high)
+                if len(tail) < high - self.wal_applied:
+                    raise WalCorruptionError(
+                        f"replica {self.replica_id}: committed prefix "
+                        f"unreadable — wanted records "
+                        f"[{self.wal_applied}, {high}), got {len(tail)} "
+                        f"(first bad record near index "
+                        f"{self.wal_applied + len(tail)})")
                 groups = self.svc._replay(tail, max_groups=max_gens)
                 _POLL_GROUPS.labels(replica=self.replica_id).inc(groups)
         _LAG_GENS.labels(replica=self.replica_id).set(

@@ -19,10 +19,20 @@ Replication here is pull-based: replicas advance when ``poll()`` runs.  The
 router polls lazily — only when no replica satisfies a read's freshness
 floor (``poll_on_miss``) — and callers drive steady-state catch-up with
 ``poll_replicas()`` at whatever heartbeat suits the deployment.
+
+Failure handling (``repro.faults``): a replica whose lease goes stale
+(``lease_timeout_s`` without a poll) or whose read/poll raises is *evicted*
+from the rotation — reads retry onto the next qualifying replica under a
+``RetryPolicy`` and finally fall back to the primary, so one bad tailer
+never fails a read that any healthy node could serve.  ``stats()`` reports
+``evictions`` by replica id and cause.
 """
 from __future__ import annotations
 
-from ..obs import metrics as obs_metrics
+import time
+
+from ..faults.retry import RetryPolicy
+from ..obs import metrics as obs_metrics, trace as obs_trace
 from ..service.api import (BOUNDED, COMMUNITY, MAX_K, MEMBERS,
                            READ_YOUR_WRITES, REPRESENTATIVES, STRONG,
                            Overloaded, QueryRequest, QueryResponse, WriteAck)
@@ -33,6 +43,10 @@ _ROUTED = obs_metrics.counter(
     "truss_router_reads_total",
     "reads routed, by consistency policy and serving node",
     labels=("consistency", "node"))
+_EVICTED = obs_metrics.counter(
+    "truss_router_evictions_total",
+    "replicas removed from the read rotation, by cause",
+    labels=("cause",))
 
 
 def query_from_record(rec, consistency: str = STRONG,
@@ -89,12 +103,47 @@ class QueryRouter:
     all writes go to the single primary."""
 
     def __init__(self, primary: TrussService, replicas=(), *,
-                 poll_on_miss: bool = True):
+                 poll_on_miss: bool = True,
+                 lease_timeout_s: float | None = None,
+                 retry: RetryPolicy | None = None, clock=time.monotonic):
         self.primary = primary
         self.replicas: list[Replica] = list(replicas)
         self.poll_on_miss = poll_on_miss
+        # lease_timeout_s: a replica that has not polled within the window
+        # is presumed wedged and evicted from the read rotation (its lease
+        # is stale); None disables liveness checks.  ``retry`` drives the
+        # replica-read retry ladder — each failed attempt evicts the failing
+        # replica and the next attempt picks another; exhaustion (or an
+        # empty rotation) falls back to the primary.
+        self.lease_timeout_s = lease_timeout_s
+        self.retry = retry if retry is not None else RetryPolicy(
+            max_attempts=3, base_ms=0.1, cap_ms=5.0, scope="router_read")
+        self._clock = clock
         self._rr = 0           # round-robin cursor over qualifying replicas
         self.served: dict[str, int] = {}
+        self.evictions: dict[str, str] = {}  # replica_id -> cause
+
+    def _evict(self, replica: Replica, cause: str):
+        """Remove one replica from the read rotation (stale lease or a
+        failed read).  Eviction is routing-only — the replica object is not
+        torn down, and a healthy one can be re-added by appending to
+        ``self.replicas``."""
+        if replica in self.replicas:
+            self.replicas.remove(replica)
+        self.evictions[replica.replica_id] = cause
+        _EVICTED.labels(cause=cause).inc()
+        obs_trace.instant("router.evict", replica=replica.replica_id,
+                          cause=cause)
+
+    def _alive(self) -> list[Replica]:
+        """Replicas with a fresh lease; stale ones are evicted on sight."""
+        if self.lease_timeout_s is None:
+            return list(self.replicas)
+        now = self._clock()
+        for r in list(self.replicas):
+            if now - r.last_poll_t > self.lease_timeout_s:
+                self._evict(r, "stale_lease")
+        return list(self.replicas)
 
     # -- writes (single-writer: always the primary) ---------------------------
     def submit(self, op: int, a: int, b: int) -> WriteAck | Overloaded:
@@ -112,24 +161,60 @@ class QueryRouter:
 
     # -- replication heartbeat ------------------------------------------------
     def poll_replicas(self):
-        """Advance every replica to the primary's committed frontier."""
-        for r in self.replicas:
-            r.poll()
+        """Advance every replica to the primary's committed frontier.  A
+        replica whose poll raises (an unreadable committed prefix, a lost
+        store mount) is evicted from the rotation rather than failing the
+        whole heartbeat — the survivors keep serving."""
+        for r in list(self.replicas):
+            try:
+                r.poll()
+            except Exception as exc:
+                obs_trace.instant("router.poll_failed",
+                                  replica=r.replica_id, err=repr(exc)[:120])
+                self._evict(r, "poll_failed")
 
     # -- reads ----------------------------------------------------------------
     def _pick(self, min_gen: int) -> Replica | None:
-        """Round-robin over replicas at/past ``min_gen``; on a miss, poll
-        once (the frontier may simply not have been pulled yet) and retry.
-        None means no replica qualifies — the caller falls back to the
-        primary."""
-        cand = [r for r in self.replicas if r.gen >= min_gen]
+        """Round-robin over live replicas at/past ``min_gen``; on a miss,
+        poll once (the frontier may simply not have been pulled yet) and
+        retry.  None means no replica qualifies — the caller falls back to
+        the primary."""
+        cand = [r for r in self._alive() if r.gen >= min_gen]
         if not cand and self.replicas and self.poll_on_miss:
             self.poll_replicas()
-            cand = [r for r in self.replicas if r.gen >= min_gen]
+            cand = [r for r in self._alive() if r.gen >= min_gen]
         if not cand:
             return None
         self._rr += 1
         return cand[self._rr % len(cand)]
+
+    def _serve_replica(self, replica: Replica, req: QueryRequest,
+                       min_gen: int) -> QueryResponse | None:
+        """Serve one read from the replica tier under the retry policy: a
+        failed attempt evicts the failing replica and the next attempt
+        round-robins onto another qualifying one.  None means the rotation
+        exhausted (every candidate failed or none qualify) and the caller
+        must fall back to the primary."""
+        node: Replica | None = replica
+        for _ in self.retry.attempts():
+            if node is None:
+                return None
+            try:
+                resp = node.handle(req)
+            except Exception as exc:
+                obs_trace.instant("router.read_failed",
+                                  replica=node.replica_id,
+                                  err=repr(exc)[:120])
+                self._evict(node, "read_failed")
+                node = self._pick(min_gen)
+                continue
+            resp.served_by = node.replica_id
+            self.served[node.replica_id] = (
+                self.served.get(node.replica_id, 0) + 1)
+            _ROUTED.labels(consistency=req.consistency,
+                           node=node.replica_id).inc()
+            return resp
+        return None
 
     def route(self, req: QueryRequest, token: int = 0) -> QueryResponse:
         """Dispatch one read under its consistency policy; the response is
@@ -152,8 +237,12 @@ class QueryRouter:
             else:
                 picked = self._pick(min_gen)
             if picked is not None:
-                node, name = picked, picked.replica_id
-            elif req.consistency == BOUNDED:
+                resp = self._serve_replica(picked, req, min_gen)
+                if resp is not None:
+                    return resp
+                # the whole replica rotation failed mid-read: fall back to
+                # the primary exactly as if no replica had qualified
+            if req.consistency == BOUNDED:
                 # primary fallback at lag 0 from the committed generation —
                 # bounded semantics never require (or pay for) a flush
                 resp = self.primary.handle_committed(req)
@@ -162,8 +251,7 @@ class QueryRouter:
                 _ROUTED.labels(consistency=req.consistency,
                                node="primary").inc()
                 return resp
-            else:
-                node, name = self.primary, "primary"
+            node, name = self.primary, "primary"
         resp = node.handle(req)
         resp.served_by = name
         self.served[name] = self.served.get(name, 0) + 1
@@ -202,4 +290,5 @@ class QueryRouter:
                          for r in self.replicas},
             "served": dict(self.served),
             "routed": by_policy,
+            "evictions": dict(self.evictions),
         }

@@ -220,7 +220,8 @@ class DynamicGraph:
         return (kmin, phi_e)
 
     def apply_batch(self, updates, strategy: str = "auto",
-                    fused_threshold: int = 8, defer_sync: bool = False):
+                    fused_threshold: int = 8, defer_sync: bool = False,
+                    engine: str = "auto"):
         """Apply a batch of (op, a, b) updates with truss maintenance.
 
         ``fusedBatchUpdate``: the batch is first *netted* on the host (an
@@ -246,6 +247,12 @@ class DynamicGraph:
         re-peel lands) before serving any label query from this state.
         Paths that already synchronized (progressive, netted no-op) return
         ``None``: their invalidation has been taken care of.
+
+        ``engine`` selects the fused path's peel engine (``"auto"`` /
+        ``"delta"`` / ``"recompute"``, forwarded to
+        ``batch.batch_maintain``): the service's graceful-degradation path
+        retries a failed delta peel with ``engine="recompute"`` before
+        quarantining the generation.
         """
         ups = [(int(op), int(a), int(b)) for op, a, b in updates]
         if not ups:
@@ -313,8 +320,8 @@ class DynamicGraph:
                                 ins=len(inss), defer=defer_sync):
                 self.state, _lo, hi, stats = batch.batch_maintain(
                     self.spec, self.state, da, db, dm, ia, ib, im,
-                    method=self.support_method, bitmap=self._bitmap,
-                    mesh=self.mesh)
+                    method=self.support_method, engine=engine,
+                    bitmap=self._bitmap, mesh=self.mesh)
         except BaseException:
             # the cache already describes the post-update edge set but
             # state/_present still the pre-update one — drop it rather than

@@ -57,6 +57,7 @@ import numpy as np
 from ..cluster import QueryRouter, Replica, query_from_record
 from ..data.streams import READ, GraphUpdateStream, MixedWorkloadStream
 from ..data.synthetic import powerlaw_graph
+from ..faults import FaultyIO, RetryPolicy, seeded_schedule
 from ..obs import expo, profiling, trace
 from ..service import (COMMUNITY, CONSISTENCY_LEVELS, MAX_K, MEMBERS,
                        REPRESENTATIVES, Overloaded, QueryRequest,
@@ -70,16 +71,73 @@ def _pipeline_kw(args) -> dict:
                 max_pending=args.max_pending)
 
 
-def _submit_retry(sink, op: int, a: int, b: int, max_tries: int = 64):
-    """Submit through a session/service, honoring ``Overloaded`` backpressure
-    with the service-suggested backoff.  Returns the eventual ``WriteAck``
-    (the stream is stateful, so a shed write must be retried, not dropped)."""
-    for _ in range(max_tries):
+def _make_store(path: str | None, args) -> TrussStore | None:
+    """Open the primary's store, optionally under a deterministic chaos
+    schedule (``--chaos-seed``): the whole run then exercises the recovery
+    ladder — checksummed WAL repair, retries, degraded mode — against
+    seeded injected disk faults."""
+    if path is None:
+        return None
+    io = None
+    if getattr(args, "chaos_seed", None) is not None:
+        faults = seeded_schedule(args.chaos_seed, n_faults=args.chaos_faults)
+        io = FaultyIO(faults)
+        print(f"chaos: seed {args.chaos_seed} -> "
+              + ", ".join(f"{f.kind}@{f.op}[{f.at}]" for f in faults))
+    return TrussStore(path, io=io)
+
+
+def _submit_retry(sink, op: int, a: int, b: int,
+                  policy: RetryPolicy | None = None):
+    """Submit through a session/service, absorbing ``Overloaded``
+    backpressure under the shared ``RetryPolicy`` (capped decorrelated
+    jitter, bounded attempts, wall-clock deadline — no caller can spin
+    forever against a degraded primary).  Returns the eventual ``WriteAck``
+    (the stream is stateful, so a shed write must be retried, not
+    dropped); raises ``RuntimeError`` when the policy exhausts."""
+    if policy is None:
+        policy = RetryPolicy(max_attempts=64, base_ms=1.0, cap_ms=100.0,
+                             deadline_s=30.0, scope="submit")
+    ack = None
+    for _ in policy.attempts():
         ack = sink.submit(op, a, b)
         if not isinstance(ack, Overloaded):
             return ack
-        time.sleep(min(ack.retry_after_ms, 100.0) / 1e3)
-    raise RuntimeError(f"write ({op},{a},{b}) shed {max_tries} times")
+    raise RuntimeError(
+        f"write ({op},{a},{b}) still shed after {policy.max_attempts} "
+        f"attempts (last reason: {ack.reason})")
+
+
+def _primary_of(obj) -> TrussService | None:
+    """The ``TrussService`` behind whatever ``main`` returned (router →
+    its primary, replica → its inner service, single node → itself)."""
+    if isinstance(obj, QueryRouter):
+        return obj.primary
+    if isinstance(obj, Replica):
+        return obj.svc
+    return obj
+
+
+def _exit_code(obj, scrub: bool) -> int:
+    """Map the end-of-run state to a process exit code so supervisors and
+    CI can tell outcomes apart: 0 healthy, 3 the primary ended degraded
+    (breaker open / writes shed), 4 the ``--scrub`` audit found integrity
+    violations."""
+    svc = _primary_of(obj)
+    if svc is None:
+        return 0
+    if scrub:
+        report = svc.scrub()
+        print(f"scrub: ok={report['ok']} "
+              f"violations={report['violations'] or 'none'}")
+        if not report["ok"]:
+            return 4
+    s = svc.stats()
+    if s["degraded"] is not None or s["breaker"]["state"] != "closed":
+        print(f"exit: degraded ({s['degraded']}, "
+              f"breaker {s['breaker']['state']})")
+        return 3
+    return 0
 
 
 def _query_mix(svc: TrussService, ks, rng) -> list[QueryRequest]:
@@ -122,7 +180,7 @@ def _run_router(args, ks, rng):
     if not args.store:
         raise SystemExit("--router requires --store")
     if args.restore:
-        primary = TrussService.restore(TrussStore(args.store),
+        primary = TrussService.restore(_make_store(args.store, args),
                                        flush_every=args.flush_every,
                                        indexed=not args.no_index,
                                        **_pipeline_kw(args))
@@ -135,7 +193,7 @@ def _run_router(args, ks, rng):
         edges = powerlaw_graph(n_nodes, args.degree, seed=args.seed)
         primary = TrussService(n_nodes, edges, tracked_ks=ks,
                                flush_every=args.flush_every,
-                               store=TrussStore(args.store),
+                               store=_make_store(args.store, args),
                                indexed=not args.no_index,
                                **_pipeline_kw(args))
     replicas = [Replica(args.store, f"replica-{i}",
@@ -146,15 +204,18 @@ def _run_router(args, ks, rng):
                              read_frac=args.read_frac, ks=ks,
                              seed=args.seed + 1)
     # Resume the workload where the snapshot left it.  A crash may have
-    # acked writes past the snapshot (the replayed WAL tail); the snapshot
-    # compacts the log, so base..wal_len counts exactly those writes — the
-    # deterministic stream regenerates them, and we skip them (their reads
-    # re-run harmlessly) instead of re-submitting already-present edges.
+    # acked writes past the snapshot (the replayed WAL tail); restore
+    # counts exactly the records replay re-derived past the snapshot's
+    # high-water mark — the deterministic stream regenerates them, and we
+    # skip them (their reads re-run harmlessly) instead of re-submitting
+    # already-present edges.  (``wal_len - base`` is NOT that count:
+    # compaction retains the previous snapshot's tail for replica
+    # catch-up, so it over-skips after the second snapshot.)
     skip_writes = 0
     if args.restore:
         if primary.stream_state is not None:
             wl.load_state_dict(primary.stream_state)
-        skip_writes = primary.store.wal_len - primary.store.base
+        skip_writes = primary.replayed_records
         print(f"restored: {primary.stats()} "
               f"(skipping {skip_writes} replayed writes)")
     sess = router.session()
@@ -237,6 +298,16 @@ def main(argv=None):
     ap.add_argument("--profile-dir", default=None, metavar="DIR",
                     help="arm jax.profiler captures around the flush and "
                          "decompose regions; traces land under DIR")
+    ap.add_argument("--chaos-seed", type=int, default=None, metavar="SEED",
+                    help="inject a deterministic fault schedule into the "
+                         "primary's store I/O (repro.faults) — the run "
+                         "exercises the recovery ladder end to end")
+    ap.add_argument("--chaos-faults", type=int, default=3,
+                    help="number of faults in the --chaos-seed schedule")
+    ap.add_argument("--scrub", action="store_true",
+                    help="run the end-to-end integrity scrub (WAL checksums, "
+                         "snapshot digests, phi invariants) after the drive "
+                         "loop; violations exit 4")
     args = ap.parse_args(argv)
 
     ks = tuple(int(k) for k in args.ks.split(","))
@@ -250,7 +321,11 @@ def main(argv=None):
     if args.profile_dir is not None:
         profiling.configure(args.profile_dir)
     try:
-        return _dispatch(args, ks, rng)
+        obj = _dispatch(args, ks, rng)
+        # stashed for the __main__ wrapper; callers that import main() keep
+        # getting the service/router/replica object back unchanged
+        obj.exit_code = _exit_code(obj, scrub=args.scrub)
+        return obj
     finally:
         if args.trace_out is not None:
             trace.write_chrome(args.trace_out)
@@ -272,7 +347,7 @@ def _dispatch(args, ks, rng):
     if args.restore:
         if not args.store:
             raise SystemExit("--restore requires --store")
-        svc = TrussService.restore(TrussStore(args.store),
+        svc = TrussService.restore(_make_store(args.store, args),
                                    flush_every=args.flush_every,
                                    indexed=not args.no_index,
                                    **_pipeline_kw(args))
@@ -299,7 +374,7 @@ def _dispatch(args, ks, rng):
         print(f"restored: {svc.stats()}")
     else:
         edges = powerlaw_graph(args.nodes, args.degree, seed=args.seed)
-        store = TrussStore(args.store) if args.store else None
+        store = _make_store(args.store, args)
         svc = TrussService(args.nodes, edges, tracked_ks=ks,
                            flush_every=args.flush_every, store=store,
                            indexed=not args.no_index, **_pipeline_kw(args))
@@ -332,4 +407,4 @@ def _dispatch(args, ks, rng):
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(getattr(main(), "exit_code", 0))

@@ -48,15 +48,31 @@ class WriteAck:
 
 @dataclasses.dataclass(frozen=True)
 class Overloaded:
-    """Admission-control rejection (pipelined service only): the bounded
-    pending queue is full and the device is still busy with an in-flight
-    generation, so the write was **not** acked — nothing hit the WAL, the
-    logical view is unchanged, and the client should retry after roughly
-    ``retry_after_ms`` (the service's EWMA of per-generation commit
-    latency).  ``gen`` is the committed generation at rejection time, so a
-    retrying client can tell whether the service is making progress."""
+    """Admission-control rejection: the write was **not** acked — nothing
+    hit the WAL, the logical view is unchanged, and the client should
+    retry after roughly ``retry_after_ms``.  ``gen`` is the committed
+    generation at rejection time, so a retrying client can tell whether
+    the service is making progress.  ``reason`` says why the write was
+    shed:
+
+    * ``"overload"`` — pipelined admission control: the bounded pending
+      queue is full and the device is still busy (retry hint is the EWMA
+      per-generation commit latency);
+    * ``"degraded"`` — the service's circuit breaker is open after a peel
+      failure or invariant violation: committed reads keep serving, writes
+      shed until the half-open retry succeeds;
+    * ``"io"`` — the durability path is failing (fsync/append errors
+      exhausted the retry policy): nothing can be acked until the disk
+      recovers."""
     retry_after_ms: float
     gen: int
+    reason: str = "overload"
+
+
+class Unavailable(RuntimeError):
+    """Raised by bulk entry points (``submit_many``) when the service is in
+    degraded mode — a batch cannot be partially acked, so it is refused as
+    a unit (per-record ``submit`` returns ``Overloaded`` instead)."""
 
 
 @dataclasses.dataclass(frozen=True)

@@ -56,6 +56,18 @@ the pending queue (``max_pending``): when it is full and the device is
 still busy, ``submit`` sheds load with an explicit ``Overloaded`` ack
 (nothing hits the WAL) instead of stalling the whole ingest path.
 
+**Graceful degradation** (``repro.faults``): every apply runs a
+delta->recompute fallback ladder; a generation that fails both engines is
+*quarantined* — its records are durable in the WAL and stay queued — and
+the circuit breaker trips the service into degraded mode, where committed
+reads keep serving and writes shed with ``Overloaded(reason=...)``.  A
+half-open probe retries the quarantined group; failures that invalidate
+the in-memory oracle (a lost in-flight landing, an invariant violation at
+a commit boundary) instead *self-heal*: reload the snapshot and replay the
+full acked WAL tail, preserving the log's generation tags so replicas stay
+bitwise-equal.  fsyncs run under a capped-jitter ``RetryPolicy``;
+exhaustion degrades the same way.  ``scrub()`` audits the whole plane.
+
 The same machinery feeds the replicated serving tier (``repro.cluster``):
 every flush publishes the committed frontier to the store (``commit.json``)
 so read replicas can tail complete generation groups, every ``WriteAck``
@@ -76,10 +88,13 @@ from ..core import representatives as core_representatives
 from ..core.graph import GraphSpec, GraphState, lookup_edge
 from ..core.maintenance import OP_INSERT
 from ..core.peel import stats_dict as peel_stats_dict
+from ..faults.retry import (CLOSED, CircuitBreaker, RetryExhausted,
+                            RetryPolicy)
 from ..obs import metrics as obs_metrics, profiling as obs_profiling
 from ..obs import trace as obs_trace
 from .api import (COMMUNITY, MAX_K, MEMBERS, REPRESENTATIVES, Overloaded,
-                  QueryRequest, QueryResponse, WriteAck, WriteRequest)
+                  QueryRequest, QueryResponse, Unavailable, WriteAck,
+                  WriteRequest)
 from ..core import index as truss_index
 from .store import TrussStore
 
@@ -117,6 +132,43 @@ _EDGES_G = obs_metrics.gauge(
 _QUERY_S = obs_metrics.histogram(
     "truss_query_seconds", "query latency by kind (flush-inclusive)",
     labels=("kind",))
+_BREAKER_G = obs_metrics.gauge(
+    "truss_breaker_state",
+    "circuit-breaker state (0 closed, 1 half-open, 2 open)")
+_DEGRADED_N = obs_metrics.counter(
+    "truss_degraded_total", "entries into degraded mode, by reason",
+    labels=("reason",))
+_DEGRADED_SHED_N = obs_metrics.counter(
+    "truss_degraded_shed_total",
+    "writes shed while the circuit breaker was open")
+_PEEL_FAULT_N = obs_metrics.counter(
+    "truss_peel_fault_total",
+    "generation apply failures (before any engine fallback)")
+_FALLBACK_N = obs_metrics.counter(
+    "truss_engine_fallback_total",
+    "generations recovered by the delta->recompute engine fallback")
+_HEAL_N = obs_metrics.counter(
+    "truss_self_heal_total",
+    "in-place rebuilds from the durable store (snapshot + full WAL replay)")
+
+
+class InvariantViolation(RuntimeError):
+    """A committed-state invariant failed its boundary check (phi below 2
+    on an active edge, or the device active count diverging from the host
+    present-set mirror) — the in-memory oracle can no longer be trusted and
+    must be rebuilt from the durable store."""
+
+
+class GenerationPoisoned(RuntimeError):
+    """One generation's apply failed on the primary engine *and* on the
+    recompute fallback.  The records are durable in the WAL (acked before
+    applied), so the generation is quarantined — kept queued for a
+    half-open retry or a self-heal replay — rather than dropped."""
+
+    def __init__(self, gen: int, n: int, cause: BaseException):
+        super().__init__(f"generation {gen} poisoned ({n} records): {cause!r}")
+        self.gen = gen
+        self.n = n
 
 
 class _Inflight(NamedTuple):
@@ -143,7 +195,9 @@ class TrussService:
                  d_max: int | None = None, e_cap: int | None = None,
                  support_method: str = "sorted", mesh=None,
                  pipeline: bool = False, target_p99_ms: float | None = None,
-                 max_pending: int | None = None):
+                 max_pending: int | None = None, chaos=None,
+                 breaker: CircuitBreaker | None = None,
+                 retry: RetryPolicy | None = None):
         if store is not None and (store.wal_len
                                   or os.path.exists(store.snap_path)):
             raise ValueError(
@@ -158,14 +212,33 @@ class TrussService:
         self.flush_every = int(flush_every)
         self.strategy = strategy
         self.indexed = indexed
+        self.support_method = support_method  # self-heal rebuilds need it
         self.gen = 0                 # committed generation
         self._pending: list = []     # acked, not yet applied
         self._applied_wal = 0        # global WAL index of the committed frontier
         self._view = set(self.graph._present)  # present + pending effects
         self.stream_state = None     # input-stream state from a snapshot
+        self.replayed_records = 0    # WAL records restore replayed past the snapshot
+        self._init_faults(chaos, breaker, retry)
         self._init_pipeline(pipeline, target_p99_ms, max_pending)
         if store is not None:
             self.snapshot()          # baseline: restore never needs gen 0 WAL
+
+    def _init_faults(self, chaos, breaker, retry):
+        """Degradation-plane state shared by both constructors: the (test-
+        injectable) peel-chaos hook, the circuit breaker gating writes, and
+        the fsync retry policy.  Every service gets a breaker and a retry
+        policy even when no chaos is configured — real disks fail too."""
+        self.chaos = chaos
+        self.breaker = breaker if breaker is not None else CircuitBreaker()
+        self.retry = retry if retry is not None else RetryPolicy(
+            max_attempts=3, base_ms=0.5, cap_ms=20.0, scope="fsync")
+        self._degraded_reason: str | None = None
+        self._needs_heal = False
+        # gen -> {"n", "records", "reason", "status"}; status flips to
+        # "recovered" once the generation commits after all
+        self._quarantined: dict[int, dict] = {}
+        _BREAKER_G.set(self.breaker.state_code)
 
     def _init_pipeline(self, pipeline: bool, target_p99_ms, max_pending):
         """Pipeline-mode state (no-ops when ``pipeline=False``).  In
@@ -199,14 +272,33 @@ class TrussService:
         from.  Called only at generation boundaries (constructor, commit,
         replay), where ``self.graph.state`` arrays are landed — reading
         edge counts / max phi here can never block on an in-flight
-        dispatch the way reading them inside ``stats()`` could."""
+        dispatch the way reading them inside ``stats()`` could.
+
+        This boundary is also where the cheap state invariants are
+        enforced (the arrays are already being pulled for ``max_truss``,
+        so the checks are free): every active edge carries phi >= 2, and
+        the device active count matches the host present-set mirror.  A
+        violation means the in-memory oracle diverged from the log and
+        raises ``InvariantViolation`` — commit paths catch it, degrade,
+        and rebuild from the store."""
         if peel is None:
             peel = peel_stats_dict(self.graph.last_peel_stats)
+        act = np.asarray(self.graph.state.active)
+        phi = np.asarray(self.graph.state.phi)
+        n_active = int(act.sum())
+        if n_active != len(self.graph._present):
+            raise InvariantViolation(
+                f"active count {n_active} != present-set size "
+                f"{len(self.graph._present)} at gen {self.gen}")
+        phis = phi[act]
+        if n_active and int(phis.min()) < 2:
+            raise InvariantViolation(
+                f"phi < 2 on an active edge at gen {self.gen}")
         self._committed = {
             "gen": self.gen,
             "wal_applied": self._applied_wal,
-            "n_edges": len(self.graph._present),
-            "max_truss": self.graph.max_truss(),
+            "n_edges": n_active,
+            "max_truss": int(phis.max(initial=0)),
             "peel": peel,
         }
         _GEN_G.set(self.gen)
@@ -231,6 +323,178 @@ class TrussService:
             self._stats_seen = ps
         return d
 
+    # -- graceful degradation -------------------------------------------------
+    def _breaker_blocks(self) -> bool:
+        """Whether writes must shed right now.  The closed-and-healthy fast
+        path never touches the gauge; an open breaker probes ``allow()`` so
+        the cooldown can flip it half-open (the probe that lets one retry
+        through)."""
+        if self._degraded_reason is None and self.breaker.state == CLOSED:
+            return False
+        ok = self.breaker.allow()
+        _BREAKER_G.set(self.breaker.state_code)
+        return not ok
+
+    def _degrade(self, reason: str, exc: BaseException | None = None):
+        """Enter degraded mode: breaker open, writes shed with an explicit
+        ``Overloaded(reason=...)``, committed reads keep serving."""
+        if self.breaker.state != "open":
+            self.breaker.trip()
+        self._degraded_reason = reason
+        _BREAKER_G.set(self.breaker.state_code)
+        _DEGRADED_N.labels(reason=reason).inc()
+        obs_trace.instant("service.degraded", reason=reason,
+                          err="" if exc is None else repr(exc)[:120])
+
+    def _recovered(self):
+        """Leave degraded mode after a definitive success: close the
+        breaker and mark quarantined generations that have since committed
+        (half-open retry or self-heal replay) as recovered — in memory and
+        in their on-disk sidecars."""
+        self.breaker.record_success()
+        _BREAKER_G.set(self.breaker.state_code)
+        if self._degraded_reason is not None:
+            obs_trace.instant("service.recovered", was=self._degraded_reason)
+            self._degraded_reason = None
+        for g, meta in self._quarantined.items():
+            if meta["status"] == "quarantined" and g <= self.gen:
+                meta["status"] = "recovered"
+                if self.store is not None:
+                    try:
+                        self.store.write_quarantine_gen(
+                            g, meta["records"], meta["reason"],
+                            status="recovered")
+                    except OSError:
+                        pass  # sidecar is advisory
+
+    def _degraded_retry_ms(self) -> float:
+        """Retry hint for shed writes: the breaker cooldown (the soonest a
+        half-open probe can possibly be admitted)."""
+        return 1e3 * max(self.breaker.cooldown_s, 1e-3)
+
+    def _shed(self, reason_default: str = "degraded") -> Overloaded:
+        """Refuse one write while degraded (nothing hits the WAL)."""
+        self.overloaded += 1
+        self._last_shed_gen = self.gen
+        _DEGRADED_SHED_N.inc()
+        reason = self._degraded_reason or reason_default
+        obs_trace.instant("service.shed", gen=self.gen, reason=reason)
+        return Overloaded(retry_after_ms=self._degraded_retry_ms(),
+                          gen=self.gen, reason=reason)
+
+    def _append_failed(self, exc: OSError) -> Overloaded:
+        """One WAL append failed (rolled back — nothing acked).  Count it
+        toward the breaker's consecutive-failure threshold; repeated
+        failures trip into io-degraded mode."""
+        self.breaker.record_failure()
+        _BREAKER_G.set(self.breaker.state_code)
+        if self.breaker.state == "open":
+            self._degrade("io", exc)
+        obs_trace.instant("wal.append_failed", err=repr(exc)[:120])
+        return Overloaded(retry_after_ms=self._degraded_retry_ms(),
+                          gen=self.gen, reason="io")
+
+    def _fsync_retry(self):
+        """fsync under the retry policy; re-raises the last ``OSError``
+        when the policy exhausts (callers degrade on it)."""
+        if self.store is None:
+            return
+        try:
+            self.retry.call(self.store.fsync, retry_on=(OSError,))
+        except RetryExhausted as exc:
+            cause = exc.__cause__
+            raise cause if isinstance(cause, OSError) else exc
+
+    def _guarded_apply(self, group, gen: int, defer_sync: bool = False):
+        """``apply_batch`` with the degradation ladder: a failure on the
+        configured engine retries once as a forced fused **recompute**
+        (the delta engine's affected-region bookkeeping is the usual
+        culprit; a from-scratch re-peel of the batch sidesteps it and
+        produces the same phi).  If the fallback also fails the generation
+        is poisoned — the caller quarantines it."""
+        try:
+            if self.chaos is not None:
+                self.chaos.check_dispatch(gen, "auto")
+            return self.graph.apply_batch(group, strategy=self.strategy,
+                                          defer_sync=defer_sync)
+        except Exception as first:
+            _PEEL_FAULT_N.inc()
+            obs_trace.instant("peel.fault", gen=gen, err=repr(first)[:120])
+            try:
+                if self.chaos is not None:
+                    self.chaos.check_dispatch(gen, "recompute")
+                out = self.graph.apply_batch(group, strategy="fused",
+                                             engine="recompute",
+                                             defer_sync=defer_sync)
+            except Exception as second:
+                raise GenerationPoisoned(gen, len(group), second) from first
+            _FALLBACK_N.inc()
+            obs_trace.instant("peel.fallback", gen=gen, engine="recompute")
+            return out
+
+    def _quarantine_gen(self, gen: int, records, exc: BaseException):
+        """Quarantine one poisoned generation.  The records are *kept* —
+        they are durable in the WAL and stay queued for the half-open
+        retry (or get re-derived by a self-heal replay); the on-disk
+        sidecar makes the poison visible to operators and ``scrub``."""
+        cause = getattr(exc, "__cause__", None) or exc
+        reason = repr(cause)[:200]
+        self._quarantined[gen] = {"n": len(records),
+                                  "records": [tuple(r) for r in records],
+                                  "reason": reason, "status": "quarantined"}
+        if self.store is not None:
+            try:
+                self.store.write_quarantine_gen(gen, records, reason)
+            except OSError:
+                pass  # sidecar is advisory; the WAL already has the records
+        self._degrade("poisoned", exc)
+
+    def _self_heal(self) -> bool:
+        """Rebuild the in-memory oracle from the durable store: reload the
+        snapshot and replay the **full** acked WAL tail through the normal
+        grouped replay.  The log's generation tags are preserved — pending
+        and quarantined generations are re-derived rather than re-acked —
+        so replicas tailing the same log stay bitwise-equal to the healed
+        primary.  Returns True when the service recovered (breaker closed,
+        quarantined generations marked recovered)."""
+        if self.store is None:
+            return False  # nothing to rebuild from: degraded until restart
+        _HEAL_N.inc()
+        try:
+            with obs_trace.span("service.self_heal", gen=self.gen):
+                tree = self.store.load_snapshot()
+                if tree is None:
+                    return False
+                n, d, e = (int(x) for x in tree["spec"])
+                state = GraphState(*tree["state"])
+                self.graph = DynamicGraph.from_state(
+                    GraphSpec(n, d, e), state, self.support_method,
+                    tuple(int(k) for k in tree["tracked"]),
+                    mesh=self.graph.mesh)
+                self.gen = int(tree["gen"])
+                self._applied_wal = int(tree["wal_len"])
+                self._pending = []
+                self._inflight = None
+                self._stats_seen = None
+                self._replay(self.store.read_wal(start=self._applied_wal))
+                self._open_gen = self.gen + 1
+                self._open_count = 0
+                try:
+                    self.store.publish_commit(self.gen, self._applied_wal)
+                except OSError:
+                    pass  # advisory: replicas lag until the next commit
+        except Exception as exc:
+            obs_trace.instant("service.self_heal_failed",
+                              err=repr(exc)[:120])
+            if self.breaker.state != "open":
+                self.breaker.trip()
+            _BREAKER_G.set(self.breaker.state_code)
+            return False
+        self._needs_heal = False
+        self._recovered()
+        self._capture_committed()  # _replay skips it when the tail is empty
+        return True
+
     # -- writes ---------------------------------------------------------------
     @staticmethod
     def _admit(view: set, op: int, a: int, b: int) -> tuple[int, int]:
@@ -254,15 +518,26 @@ class TrussService:
         durable in the WAL and will apply at the next generation boundary.
         In pipeline mode a full pending queue with the device busy returns
         ``Overloaded`` instead (the write is NOT acked — nothing appended,
-        view unchanged); retry after ``retry_after_ms``."""
+        view unchanged); retry after ``retry_after_ms``.  A degraded
+        service (breaker open) sheds every write the same way, with
+        ``reason`` naming why — committed reads keep serving throughout."""
         op, a, b = int(op), int(a), int(b)
         if self.pipeline:
             return self._submit_pipelined(op, a, b)
+        if self._breaker_blocks():
+            return self._shed()
+        if self._needs_heal and not self._self_heal():
+            return self._shed()
         key = self._admit(self._view, op, a, b)
         # WAL first: if the append fails (disk full, closed store) the view
         # and pending queue are untouched and the submit can be retried
-        wal_index = (self.store.append(self.gen + 1, [(op, a, b)])
-                     if self.store is not None else -1)
+        try:
+            wal_index = (self.store.append(self.gen + 1, [(op, a, b)])
+                         if self.store is not None else -1)
+        except OSError as exc:
+            return self._append_failed(exc)
+        if self.breaker.failures:
+            self.breaker.record_success()  # the failure run was transient
         if op == OP_INSERT:
             self._view.add(key)
         else:
@@ -279,6 +554,10 @@ class TrussService:
         be running on the device.  The host path (validate, WAL-append,
         queue) never waits for the device; ``_pump`` opportunistically lands
         a finished generation and dispatches the next sealed one."""
+        if self._breaker_blocks():
+            return self._shed()
+        if self._needs_heal and not self._self_heal():
+            return self._shed()
         self._pump()
         if (len(self._pending) >= self.max_pending
                 and self._inflight is not None):
@@ -295,8 +574,13 @@ class TrussService:
         gen = self._open_gen
         # WAL first (acked-before-applied): a failed append leaves the view
         # and queue untouched, so the submit can simply be retried
-        wal_index = (self.store.append(gen, [(op, a, b)])
-                     if self.store is not None else -1)
+        try:
+            wal_index = (self.store.append(gen, [(op, a, b)])
+                         if self.store is not None else -1)
+        except OSError as exc:
+            return self._append_failed(exc)
+        if self.breaker.failures:
+            self.breaker.record_success()  # the failure run was transient
         if op == OP_INSERT:
             self._view.add(key)
         else:
@@ -323,34 +607,63 @@ class TrussService:
         self._open_gen += 1
         self._open_count = 0
 
-    def _dispatch_next(self):
+    def _dispatch_next(self) -> bool:
         """Dispatch the oldest queued generation group to the device without
         blocking on the result (requires no generation in flight).  Records
-        leave ``_pending`` here; they count as applied only at completion."""
+        leave ``_pending`` here; they count as applied only at completion.
+        Returns whether the pipeline made progress — False means the
+        service degraded (fsync exhausted, generation poisoned) and the
+        caller must stop pumping; the group's records are back at the head
+        of the queue for the half-open retry."""
         tag = self._pending[0][0]
         n = 0
         while n < len(self._pending) and self._pending[n][0] == tag:
             n += 1
         group = [rec[1:] for rec in self._pending[:n]]
+        if self.store is not None:
+            # durable before applied — and *before* the records leave the
+            # queue, so an exhausted fsync degrades with nothing half-dequeued
+            try:
+                self._fsync_retry()
+            except OSError as exc:
+                self._degrade("io", exc)
+                return False
         del self._pending[:n]
         if tag == self._open_gen:
             # draining a still-open partial group (explicit flush): later
             # submits start a fresh generation
             self._seal()
-        if self.store is not None:
-            self.store.fsync()  # durable before applied, exactly like flush
         _Q_DEPTH.set(len(self._pending))
         t0 = time.perf_counter()
-        with obs_trace.span("gen.dispatch", gen=tag, n=n):
-            hi = self.graph.apply_batch(group, strategy=self.strategy,
-                                        defer_sync=True)
-        if hi is None:
-            # netted no-op or progressive path: already applied and synced —
-            # commit immediately, nothing in flight
-            self._commit_generation(tag, n,
-                                    dur_s=time.perf_counter() - t0)
-            return
+        try:
+            with obs_trace.span("gen.dispatch", gen=tag, n=n):
+                hi = self._guarded_apply(group, tag, defer_sync=True)
+        except GenerationPoisoned as exc:
+            self._pending[:0] = [(tag, op, a, b) for op, a, b in group]
+            _Q_DEPTH.set(len(self._pending))
+            self._quarantine_gen(tag, group, exc)
+            return False
+        try:
+            if hi is None:
+                # netted no-op or progressive path: already applied and
+                # synced — this dispatch doubles as the landing, so the
+                # chaos land hook fires here, and commit is immediate
+                if self.chaos is not None:
+                    self.chaos.check_land(tag)
+                self._commit_generation(tag, n,
+                                        dur_s=time.perf_counter() - t0)
+                return True
+        except Exception as exc:
+            reason = ("invariant" if isinstance(exc, InvariantViolation)
+                      else "poisoned")
+            obs_trace.instant("gen.land_failed", gen=tag,
+                              err=repr(exc)[:120])
+            self._degrade(reason, exc)
+            self._needs_heal = True
+            self._self_heal()
+            return False
         self._inflight = _Inflight(gen=tag, n=n, hi=hi, t0=t0)
+        return True
 
     def _commit_generation(self, gen: int, n: int,
                            dur_s: float | None = None):
@@ -358,13 +671,33 @@ class TrussService:
         records) has fully landed.  All commit paths (serial flush,
         pipelined land, netted no-op dispatch, replay) funnel through here,
         so this is where the registry counters advance and the committed
-        stats snapshot refreshes."""
+        stats snapshot refreshes.
+
+        ``_capture_committed`` may raise ``InvariantViolation`` — in that
+        case the durable frontier is *not* published (replicas never see a
+        frontier covering a suspect state) and the caller degrades.  A
+        failed ``commit.json`` write is tolerated: the frontier file is
+        advisory (replicas just lag until the next successful publish),
+        losing it must not fail an already-landed generation."""
         self.gen = gen
         self._applied_wal += n
         peel = self._record_commit_metrics(n, dur_s)
         self._capture_committed(peel)
         if self.store is not None:
-            self.store.publish_commit(self.gen, self._applied_wal)
+            try:
+                self.store.publish_commit(self.gen, self._applied_wal)
+            except OSError as exc:
+                self.breaker.record_failure()
+                _BREAKER_G.set(self.breaker.state_code)
+                obs_trace.instant("commit.publish_failed",
+                                  gen=self.gen, err=repr(exc)[:120])
+        # a full commit is the definitive success signal: close the breaker
+        # and flip any retried quarantined generations to recovered (skipped
+        # mid-heal — the heal reports success itself once the replay is done)
+        if not self._needs_heal and (
+                self._degraded_reason is not None
+                or self.breaker.state != CLOSED or self.breaker.failures):
+            self._recovered()
 
     def _complete(self, wait: bool = True) -> bool:
         """Land the in-flight generation.  ``wait=False`` only completes a
@@ -383,12 +716,29 @@ class TrussService:
         # int(hi) blocks until the whole fused executable (phi included —
         # one jit call, one executable) has landed, then the deferred index
         # invalidation runs before any query can read labels
-        with obs_trace.span("gen.land", gen=inf.gen, n=inf.n) as sp:
-            self.graph.index.invalidate(2, max(int(inf.hi), 1))
-            dt = time.perf_counter() - inf.t0
+        try:
+            with obs_trace.span("gen.land", gen=inf.gen, n=inf.n) as sp:
+                if self.chaos is not None:
+                    self.chaos.check_land(inf.gen)
+                self.graph.index.invalidate(2, max(int(inf.hi), 1))
+                dt = time.perf_counter() - inf.t0
+                self._inflight = None
+                self._commit_generation(inf.gen, inf.n, dur_s=dt)
+                sp.set(**self._committed["peel"])
+        except Exception as exc:
+            # a device-side failure surfacing at the blocking read, or an
+            # invariant violation at commit: the generation's result is
+            # lost/untrusted but its records are durable in the WAL
+            # (acked-before-applied), so rebuild the oracle from the store
             self._inflight = None
-            self._commit_generation(inf.gen, inf.n, dur_s=dt)
-            sp.set(**self._committed["peel"])
+            reason = ("invariant" if isinstance(exc, InvariantViolation)
+                      else "poisoned")
+            _PEEL_FAULT_N.inc()
+            obs_trace.instant("gen.land_failed", gen=inf.gen,
+                              err=repr(exc)[:120])
+            self._degrade(reason, exc)
+            self._needs_heal = True
+            return self._self_heal()
         self._observe_gen_latency(dt)
         return True
 
@@ -421,8 +771,10 @@ class TrussService:
         if self._inflight is not None:
             self._complete(wait=False)
         while (self._inflight is None and self._pending
-               and self._pending[0][0] < self._open_gen):
-            self._dispatch_next()
+               and self._pending[0][0] < self._open_gen
+               and not self._breaker_blocks()):
+            if not self._dispatch_next():
+                break
 
     def submit_many(self, updates) -> list[WriteAck]:
         """Batch admission: validate every record against the logical view
@@ -443,6 +795,12 @@ class TrussService:
         ups = [(int(op), int(a), int(b)) for op, a, b in updates]
         if not ups:
             return []
+        # a batch cannot be partially acked, so degraded mode refuses it as
+        # a unit (per-record submit returns Overloaded instead)
+        if self._breaker_blocks() or (self._needs_heal
+                                      and not self._self_heal()):
+            raise Unavailable(
+                f"service degraded ({self._degraded_reason or 'breaker open'})")
         if self.pipeline:
             return self._submit_many_pipelined(ups)
         view = set(self._view)
@@ -460,8 +818,12 @@ class TrussService:
                 gen += 1
                 pend = 0
         # WAL first (one write, rollback on failure leaves nothing acked)
-        start = (self.store.append_tagged(tagged)
-                 if self.store is not None else -1)
+        try:
+            start = (self.store.append_tagged(tagged)
+                     if self.store is not None else -1)
+        except OSError as exc:
+            self._append_failed(exc)
+            raise
         self._view = view
         acks = []
         for i, (tag, op, a, b) in enumerate(tagged):
@@ -495,8 +857,12 @@ class TrussService:
                 gen += 1
                 cnt = 0
         # WAL first (one write, rollback on failure leaves nothing acked)
-        start = (self.store.append_tagged(tagged)
-                 if self.store is not None else -1)
+        try:
+            start = (self.store.append_tagged(tagged)
+                     if self.store is not None else -1)
+        except OSError as exc:
+            self._append_failed(exc)
+            raise
         self._view = view
         acks = []
         for i, (tag, op, a, b) in enumerate(tagged):
@@ -535,7 +901,24 @@ class TrussService:
         Pipeline mode: **drain** — land the in-flight generation, then
         dispatch-and-land every queued group (including a partial open one)
         in WAL order.  This is the read barrier every query takes, so reads
-        keep happening at generation boundaries with read-your-writes."""
+        keep happening at generation boundaries with read-your-writes.
+
+        Degraded mode: a blocked breaker makes flush a no-op (reads serve
+        the committed state, queued records wait for the half-open probe);
+        the probe itself arrives here too — it retries the quarantined
+        head group, or self-heals from the store when the in-memory oracle
+        is marked untrusted."""
+        if self._breaker_blocks():
+            if self.pipeline and self._inflight is not None:
+                # bounded wait for work already running: landing it keeps
+                # the committed state consistent with the arrays queries read
+                self._complete(wait=True)
+            return self.gen
+        if self._needs_heal:
+            # everything pending is re-derived from the WAL by the heal —
+            # nothing left to flush on success, still degraded on failure
+            self._self_heal()
+            return self.gen
         if self.pipeline:
             if self._inflight is None and not self._pending:
                 return self.gen
@@ -543,23 +926,41 @@ class TrussService:
                                 pending=len(self._pending)):
                 with obs_profiling.profile_region("flush"):
                     self._complete(wait=True)
-                    while self._pending:
-                        self._dispatch_next()
+                    while self._pending and not self._breaker_blocks():
+                        if not self._dispatch_next():
+                            break
                         self._complete(wait=True)
-            _Q_DEPTH.set(0)
+            _Q_DEPTH.set(len(self._pending))
             return self.gen
         if not self._pending:
             return self.gen
         with obs_trace.span("flush", mode="serial", n=len(self._pending)):
             with obs_profiling.profile_region("flush"):
                 if self.store is not None:
-                    self.store.fsync()
+                    try:
+                        self._fsync_retry()
+                    except OSError as exc:
+                        self._degrade("io", exc)
+                        return self.gen
                 t0 = time.perf_counter()
-                self.graph.apply_batch(self._pending, strategy=self.strategy)
+                try:
+                    self._guarded_apply(self._pending, self.gen + 1)
+                except GenerationPoisoned as exc:
+                    # records stay pending: durable in the WAL, retried at
+                    # the next half-open probe
+                    self._quarantine_gen(self.gen + 1, list(self._pending),
+                                         exc)
+                    return self.gen
                 n_applied = len(self._pending)
                 self._pending = []
-                self._commit_generation(self.gen + 1, n_applied,
-                                        dur_s=time.perf_counter() - t0)
+                try:
+                    self._commit_generation(self.gen + 1, n_applied,
+                                            dur_s=time.perf_counter() - t0)
+                except InvariantViolation as exc:
+                    self._degrade("invariant", exc)
+                    self._needs_heal = True
+                    self._self_heal()
+                    return self.gen
         return self.gen
 
     # -- queries (read-your-writes: flush first) ------------------------------
@@ -665,6 +1066,14 @@ class TrussService:
         if self.store is None:
             raise ValueError("service has no store")
         self.flush()
+        if self._pending or self._inflight is not None:
+            # degraded flush is a no-op: the WAL holds acked records the
+            # state does not cover, and a snapshot stamped with the current
+            # wal_len would make restore skip them — refuse instead
+            raise Unavailable(
+                f"cannot snapshot while degraded "
+                f"({self._degraded_reason or 'breaker open'}): "
+                f"{len(self._pending)} acked records unapplied")
         self.store.fsync()
         spec = self.graph.spec
         tree = {
@@ -687,7 +1096,9 @@ class TrussService:
                             support_method: str = "sorted",
                             mesh=None, pipeline: bool = False,
                             target_p99_ms=None,
-                            max_pending: int | None = None) -> "TrussService":
+                            max_pending: int | None = None, chaos=None,
+                            breaker: CircuitBreaker | None = None,
+                            retry: RetryPolicy | None = None) -> "TrussService":
         """Rebuild a service around a snapshot tree — no WAL replay.  Shared
         by ``restore`` and the cluster ``Replica`` (which bootstraps with
         ``store=None`` and tails the primary's WAL itself)."""
@@ -701,11 +1112,14 @@ class TrussService:
         svc.flush_every = int(flush_every)
         svc.strategy = strategy
         svc.indexed = indexed
+        svc.support_method = support_method
         svc.gen = int(tree["gen"])
         svc._pending = []
         svc._applied_wal = int(tree["wal_len"])
         svc._view = set(svc.graph._present)
         svc.stream_state = tree.get("stream")
+        svc.replayed_records = 0
+        svc._init_faults(chaos, breaker, retry)
         svc._init_pipeline(pipeline, target_p99_ms, max_pending)
         return svc
 
@@ -714,12 +1128,17 @@ class TrussService:
                 strategy: str = "auto", indexed: bool = True,
                 support_method: str = "sorted", mesh=None,
                 pipeline: bool = False, target_p99_ms=None,
-                max_pending: int | None = None) -> "TrussService":
+                max_pending: int | None = None, chaos=None,
+                breaker: CircuitBreaker | None = None,
+                retry: RetryPolicy | None = None) -> "TrussService":
         """Last snapshot + WAL-tail replay => the exact pre-crash oracle.
         The replay applies *every* acked record, committed or not — an
         in-flight generation a pipelined primary lost in the crash is
         simply discarded on the device side and re-derived here from its
-        WAL group (same guarantee as the serial path)."""
+        WAL group (same guarantee as the serial path).  The store itself
+        already repaired or quarantined any corrupt WAL tail when it was
+        opened (see ``TrussStore``); a corrupt record *below* the committed
+        frontier raised there and never reaches this constructor."""
         tree = store.load_snapshot()
         if tree is None:
             raise ValueError(f"no snapshot in {store.root}")
@@ -729,8 +1148,15 @@ class TrussService:
                                       support_method=support_method,
                                       mesh=mesh, pipeline=pipeline,
                                       target_p99_ms=target_p99_ms,
-                                      max_pending=max_pending)
-        svc._replay(store.read_wal(start=svc._applied_wal))
+                                      max_pending=max_pending, chaos=chaos,
+                                      breaker=breaker, retry=retry)
+        start = svc._applied_wal
+        svc._replay(store.read_wal(start=start))
+        # records past the snapshot's high-water mark that replay re-derived
+        # (launchers use this to fast-forward deterministic input streams —
+        # NOT wal_len - base, which under compact-to-prev retention counts
+        # the previous snapshot's tail too)
+        svc.replayed_records = svc._applied_wal - start
         store.publish_commit(svc.gen, svc._applied_wal)
         return svc
 
@@ -749,7 +1175,12 @@ class TrussService:
             nonlocal groups, group, group_gen
             t0 = time.perf_counter()
             with obs_trace.span("gen.replay", gen=group_gen, n=len(group)):
-                self.graph.apply_batch(group, strategy=self.strategy)
+                # the guarded path gives replay the same delta->recompute
+                # fallback the live flush has (a tail that poisoned the
+                # primary engine still restores); GenerationPoisoned
+                # propagates to the caller — loud on restore, caught and
+                # reported by self-heal
+                self._guarded_apply(group, group_gen)
             self._commit_generation(group_gen, len(group),
                                     dur_s=time.perf_counter() - t0)
             groups += 1
@@ -769,6 +1200,53 @@ class TrussService:
         return groups
 
     # -- introspection --------------------------------------------------------
+    def scrub(self, deep: bool = False) -> dict:
+        """End-to-end integrity audit (no mutation, safe while degraded):
+        the store's durability scrub (WAL record checksums, snapshot
+        manifest digests, commit-frontier coverage, quarantine census)
+        plus the in-memory phi-vs-bounds invariants on the current arrays —
+        ``phi >= 2`` on every active edge, ``phi(u,v) <= min(deg u, deg v)
+        + 1`` (an edge's truss number is bounded by its endpoints' degrees),
+        and with ``deep=True`` the triangle bound ``phi(e) <= sup(e) + 2``
+        (one full support recount).  Returns a report dict; ``ok`` is the
+        conjunction of every check."""
+        report: dict = {"ok": True, "violations": [], "store": None}
+        if self.store is not None:
+            s = self.store.scrub()
+            report["store"] = s
+            report["ok"] = bool(s["ok"])
+            if not s["ok"]:  # store reports a count; name it here
+                report["violations"].append(
+                    f"store scrub: {s['violations']} violation(s)")
+        act = np.asarray(self.graph.state.active)
+        phi = np.asarray(self.graph.state.phi)
+        edges = np.asarray(self.graph.state.edges)
+        viol = []
+        if int(act.sum()) != len(self.graph._present):
+            viol.append("active count != present-set size")
+        if act.any():
+            p = phi[act]
+            if int(p.min()) < 2:
+                viol.append("phi < 2 on an active edge")
+            deg = np.bincount(edges[act].reshape(-1),
+                              minlength=self.graph.spec.n_nodes)
+            du, dv = deg[edges[act][:, 0]], deg[edges[act][:, 1]]
+            if bool((p > np.minimum(du, dv) + 1).any()):
+                viol.append("phi exceeds degree bound min(deg u, deg v)+1")
+            if deep:
+                from ..core.graph import support_all
+                sup = np.asarray(support_all(self.graph.spec,
+                                             self.graph.state,
+                                             self.graph.state.active))
+                if bool((p > sup[act] + 2).any()):
+                    viol.append("phi exceeds support bound sup+2")
+        report["violations"].extend(viol)
+        report["ok"] = report["ok"] and not viol
+        report["degraded"] = self._degraded_reason
+        report["quarantined"] = {int(g): m["status"]
+                                 for g, m in self._quarantined.items()}
+        return report
+
     def stats(self) -> dict:
         """Operational counters: generations, WAL frontiers, peel + pipeline
         state.  Array-derived fields (``n_edges``, ``max_truss``, ``peel``,
@@ -791,6 +1269,12 @@ class TrussService:
             "tracked_ks": tuple(self.graph.index.tracked),
             "max_truss": c["max_truss"],
             "peel": dict(c["peel"]),
+            "degraded": self._degraded_reason,
+            "breaker": {"state": self.breaker.state,
+                        "trips": self.breaker.trips},
+            "quarantined_gens": sorted(
+                g for g, m in self._quarantined.items()
+                if m["status"] == "quarantined"),
         }
         if self.store is not None:
             # replication lag per tailer, from the lease files the replicas
@@ -812,6 +1296,10 @@ class TrussService:
             "sheds": reg.value("truss_pipeline_shed_total"),
             "progressive_updates":
                 reg.value("truss_progressive_updates_total"),
+            "peel_faults": reg.value("truss_peel_fault_total"),
+            "engine_fallbacks": reg.value("truss_engine_fallback_total"),
+            "self_heals": reg.value("truss_self_heal_total"),
+            "degraded_sheds": reg.value("truss_degraded_shed_total"),
         }
         if self.pipeline:
             out["pipeline"] = {

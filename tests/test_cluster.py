@@ -84,9 +84,13 @@ def test_replica_across_compaction(tmp_path):
     stream = make_update_stream(np.asarray(edges), N, 30, seed=23)
     svc = _svc(edges, tmp_path)
     rep = Replica(str(tmp_path), "r0")   # bootstrapped at gen 0
-    for rec in stream[:20]:
+    for rec in stream[:10]:
         svc.submit(*map(int, rec))
-    svc.snapshot()                       # compacts: base jumps past rep
+    svc.snapshot()
+    for rec in stream[10:20]:
+        svc.submit(*map(int, rec))
+    # the second snapshot compacts to the first's mark: base jumps past rep
+    svc.snapshot()
     for rec in stream[20:]:
         svc.submit(*map(int, rec))
     svc.flush()

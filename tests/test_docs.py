@@ -23,16 +23,25 @@ def _fenced_blocks():
                                             text, re.S)]
 
 
+_V2_TAG = re.compile(r"^c[0-9a-f]{8}$")
+
+
 def _is_wal_block(block: str) -> bool:
     """A block is a WAL example iff every line is a base header or a
-    4-integer record (the grammar line ``gen op a b`` is not numeric)."""
+    record: 4 integers (legacy v1) optionally followed by a ``c<crc32c>``
+    tag (v2).  The grammar lines ``gen op a b [c<crc32c>]`` are not
+    numeric, so they don't count."""
     lines = [ln for ln in block.splitlines() if ln.strip()]
     if not lines:
         return False
     for ln in lines:
         if ln.startswith("# base "):
+            if len(ln.split()) not in (3, 4):
+                return False
             continue
         parts = ln.split()
+        if len(parts) == 5 and _V2_TAG.match(parts[4]):
+            parts = parts[:4]
         if len(parts) != 4 or not all(p.lstrip("-").isdigit() for p in parts):
             return False
     return True

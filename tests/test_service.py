@@ -154,8 +154,11 @@ def test_restore_truncates_torn_wal_tail(tmp_path):
 
 
 def test_snapshot_compacts_wal(tmp_path):
-    """Each snapshot drops the covered WAL prefix (restart cost is O(tail),
-    not O(history)); record indices stay global across compactions."""
+    """Each snapshot compacts the WAL to the *previous* snapshot's
+    high-water mark (restart cost is O(two snapshot intervals), and the
+    retained interval is what makes the ``.prev`` snapshot fallback able
+    to reach the frontier if the current snapshot rots); record indices
+    stay global across compactions."""
     rng = np.random.default_rng(13)
     edges = _random_graph(rng, 0.3)
     stream = make_update_stream(np.asarray(edges), N, 36, seed=6)
@@ -163,15 +166,16 @@ def test_snapshot_compacts_wal(tmp_path):
     for i, rec in enumerate(stream[:30]):
         svc.submit(*map(int, rec))
         if i % 12 == 11:
-            svc.snapshot()
+            svc.snapshot()  # snapshots at wal_len 12 and 24
     with open(svc.store.wal_path) as f:
         lines = f.readlines()
-    assert lines[0] == "# base 24\n"
-    assert len(lines) == 1 + (30 - 24)  # header + tail past the snapshot
+    # the snapshot at 24 compacts to the previous snapshot's mark (12)
+    assert lines[0].startswith("# base 12")
+    assert len(lines) == 1 + (30 - 12)  # header + retained interval + tail
     svc.store.close()
     del svc
     restored = TrussService.restore(TrussStore(str(tmp_path)), flush_every=4)
-    assert restored.store.base == 24 and restored.store.wal_len == 30
+    assert restored.store.base == 12 and restored.store.wal_len == 30
     orc = oracle.Oracle(N, edges)
     orc.apply(stream[:30])
     _assert_matches_oracle(restored, orc)
