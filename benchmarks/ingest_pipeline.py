@@ -48,6 +48,8 @@ from repro.configs import truss_paper
 from repro.data.streams import READ, MixedWorkloadStream
 from repro.data.synthetic import powerlaw_graph
 from repro.obs import metrics as obs_metrics
+from repro.obs import slo as obs_slo
+from repro.obs import trace as obs_trace
 from repro.service import (Overloaded, TrussService, TrussStore, WriteAck)
 
 # registry counters diffed around each drive -> the waves/sheds/fsyncs
@@ -62,10 +64,19 @@ OUT_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 
 def _drive(edges, n_nodes, *, pipeline, ticks, chunk, read_frac, ks,
            flush_every, target_p99_ms, max_pending, seed=5,
-           checksum=True):
+           checksum=True, operability=False):
     """One mode over the fixed workload.  Returns throughput/latency
     aggregates; wall time covers the whole drive including the final
-    drain, so 'sustained' means every peel the writes caused is paid."""
+    drain, so 'sustained' means every peel the writes caused is paid.
+
+    ``operability=True`` additionally exercises the PR-9 operability plane
+    the way ``serve_truss`` wires it: an attached SLO burn-rate engine
+    (evaluated at every commit, internally rate-limited) and trace
+    propagation at the same granularity as the CLI edge — one minted
+    ``TraceContext`` bound per workload tick, which also stamps one
+    ``# trace`` WAL annotation per generation.
+    ``benchmarks.obs_overhead`` A/Bs this against a fully disabled plane.
+    """
     tel0 = {k: obs_metrics.REGISTRY.value(n) for k, n in _TELEMETRY.items()}
     with tempfile.TemporaryDirectory() as root:
         svc = TrussService(n_nodes, edges, tracked_ks=ks,
@@ -73,6 +84,8 @@ def _drive(edges, n_nodes, *, pipeline, ticks, chunk, read_frac, ks,
                            store=TrussStore(root, checksum=checksum),
                            pipeline=pipeline, target_p99_ms=target_p99_ms,
                            max_pending=max_pending)
+        if operability:
+            svc.attach_slo(obs_slo.SLOEngine())
         wl = MixedWorkloadStream(edges, n_nodes, chunk=chunk,
                                  read_frac=read_frac, ks=ks, seed=seed)
         w_lat: list[float] = []
@@ -80,22 +93,26 @@ def _drive(edges, n_nodes, *, pipeline, ticks, chunk, read_frac, ks,
         retries = 0
         t_wall0 = time.perf_counter()
         for _ in range(ticks):
-            for rec in wl.next():
-                if rec[0] == READ:
-                    req = query_from_record(rec)
-                    t0 = time.perf_counter()
-                    svc.handle_committed(req)
-                    r_lat.append(time.perf_counter() - t0)
-                else:
-                    t0 = time.perf_counter()
-                    while True:
-                        ack = svc.submit(int(rec[1]), int(rec[2]),
-                                         int(rec[3]))
-                        if isinstance(ack, WriteAck):
-                            break
-                        retries += 1
-                        time.sleep(min(ack.retry_after_ms, 20.0) / 1e3)
-                    w_lat.append(time.perf_counter() - t0)
+            # one trace context per tick — the granularity serve_truss
+            # mints at its CLI edge (None binds are no-ops)
+            ctx = obs_trace.TraceContext.mint() if operability else None
+            with obs_trace.TRACER.bind(ctx):
+                for rec in wl.next():
+                    if rec[0] == READ:
+                        req = query_from_record(rec)
+                        t0 = time.perf_counter()
+                        svc.handle_committed(req)
+                        r_lat.append(time.perf_counter() - t0)
+                    else:
+                        t0 = time.perf_counter()
+                        while True:
+                            ack = svc.submit(int(rec[1]), int(rec[2]),
+                                             int(rec[3]))
+                            if isinstance(ack, WriteAck):
+                                break
+                            retries += 1
+                            time.sleep(min(ack.retry_after_ms, 20.0) / 1e3)
+                        w_lat.append(time.perf_counter() - t0)
         svc.flush()  # drain: every acked write is applied before we stop
         t_wall = time.perf_counter() - t_wall0
         pipe_stats = svc.stats().get("pipeline")

@@ -11,6 +11,13 @@ silently merge.  A row may additionally end with a telemetry dict
 (``{"waves", "sheds", "fsyncs"}`` deltas pulled from the obs metrics
 registry) filling the last three columns; rows without one — including
 legacy rows merged from an older results.csv — leave them empty.
+
+``--check-regressions`` turns the run into a perf-trajectory gate: every
+row this run produced is compared against the committed ``results.csv``
+and a slowdown of more than 10% fails the process (exit 1).  The full
+comparison — including improvements and brand-new rows, which never
+fail — is written to ``benchmarks/BENCH_trajectory.json`` so a red run
+names exactly which benchmark drifted and by how much.
 """
 from __future__ import annotations
 
@@ -30,6 +37,10 @@ def main() -> None:
                     help="comma list: truss,batch,peel,service,cluster,"
                          "pipeline,affected,kernels,distributed,sharded,"
                          "roofline,obs,chaos")
+    ap.add_argument("--check-regressions", action="store_true",
+                    help="gate this run against the committed results.csv: "
+                         "a >10%% per-row slowdown exits 1; the full "
+                         "comparison lands in benchmarks/BENCH_trajectory.json")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (affected_set, batch_update, chaos_availability,
@@ -88,6 +99,18 @@ def main() -> None:
     platform = jax.default_backend()
 
     out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results.csv")
+    # the committed per-row numbers, captured before this run overwrites
+    # them — both the --only merge and the regression gate need them
+    prev_us: dict[str, float] = {}
+    if os.path.exists(out):
+        with open(out) as f:
+            for line in f.read().splitlines()[1:]:
+                if line.strip():
+                    parts = line.split(",")
+                    try:
+                        prev_us[parts[0]] = float(parts[1])
+                    except (IndexError, ValueError):
+                        pass
     # A partial run (--only) merges into the existing csv by row name so the
     # perf trajectory keeps every section's latest numbers.  Legacy rows
     # (3- or 5-column eras) are padded so the file stays uniform under the
@@ -119,6 +142,66 @@ def main() -> None:
         lines.append(line)
     with open(out, "w") as f:
         f.write("\n".join(lines) + "\n")
+
+    if args.check_regressions:
+        raise SystemExit(_check_regressions(rows, prev_us, platform,
+                                            ndev_default))
+
+
+#: Per-row slowdown tolerated by ``--check-regressions`` before exit 1.
+DRIFT_TOLERANCE = 0.10
+
+
+def _check_regressions(rows, prev_us: dict[str, float], platform: str,
+                       ndev: int) -> int:
+    """Compare this run's rows against the committed ``results.csv``
+    numbers, write ``BENCH_trajectory.json``, and return the exit code
+    (1 when any row slowed down by more than :data:`DRIFT_TOLERANCE`).
+
+    Only rows *this run produced* are gated — legacy csv rows whose
+    section wasn't selected can't regress from not running.  New rows
+    (no committed baseline) and improvements are recorded but never
+    fail; wall-clock micro-benchmarks are noisy, so the gate is one-sided
+    on purpose.
+    """
+    import json
+
+    traj: dict[str, dict] = {}
+    regressions: list[str] = []
+    for row in rows:
+        name, us = row[0], float(row[1])
+        old = prev_us.get(name)
+        if old is None or old <= 0:
+            traj[name] = {"new_us": round(us, 1), "status": "new"}
+            continue
+        ratio = us / old
+        if ratio > 1.0 + DRIFT_TOLERANCE:
+            status = "regressed"
+            regressions.append(name)
+        elif ratio < 1.0 - DRIFT_TOLERANCE:
+            status = "improved"
+        else:
+            status = "ok"
+        traj[name] = {"prev_us": round(old, 1), "new_us": round(us, 1),
+                      "ratio": round(ratio, 4), "status": status}
+    bundle = {
+        "tolerance": DRIFT_TOLERANCE,
+        "platform": platform,
+        "devices": ndev,
+        "rows": traj,
+        "regressions": regressions,
+    }
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_trajectory.json")
+    with open(path, "w") as f:
+        json.dump(bundle, f, indent=1)
+    print(f"\ntrajectory -> {path} ({len(traj)} rows checked, "
+          f"{len(regressions)} regressed)")
+    for name in regressions:
+        r = traj[name]
+        print(f"  REGRESSED {name}: {r['prev_us']}us -> {r['new_us']}us "
+              f"({(r['ratio'] - 1) * 100:+.1f}%)")
+    return 1 if regressions else 0
 
 
 if __name__ == "__main__":

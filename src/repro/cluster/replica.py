@@ -170,7 +170,9 @@ class Replica:
                         f"[{self.wal_applied}, {high}), got {len(tail)} "
                         f"(first bad record near index "
                         f"{self.wal_applied + len(tail)})")
-                groups = self.svc._replay(tail, max_groups=max_gens)
+                groups = self.svc._replay(
+                    tail, max_groups=max_gens,
+                    annotations=self.store.read_trace_annotations())
                 _POLL_GROUPS.labels(replica=self.replica_id).inc(groups)
         _LAG_GENS.labels(replica=self.replica_id).set(
             int(commit["gen"]) - self.gen)
@@ -214,7 +216,8 @@ class Replica:
             self.svc = TrussService._from_snapshot_tree(tree, store=None,
                                                         **self._kw)
         svc = self.svc
-        svc._replay(store.read_wal(start=self.wal_applied))
+        svc._replay(store.read_wal(start=self.wal_applied),
+                    annotations=store.read_trace_annotations())
         svc.store = store
         store.publish_commit(svc.gen, svc._applied_wal)
         store.remove_replica(self.replica_id)  # no longer a tailer

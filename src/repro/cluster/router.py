@@ -29,10 +29,12 @@ never fails a read that any healthy node could serve.  ``stats()`` reports
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 from ..faults.retry import RetryPolicy
 from ..obs import metrics as obs_metrics, trace as obs_trace
+from ..obs.state import STATE as _OBS_STATE
 from ..service.api import (BOUNDED, COMMUNITY, MAX_K, MEMBERS,
                            READ_YOUR_WRITES, REPRESENTATIVES, STRONG,
                            Overloaded, QueryRequest, QueryResponse, WriteAck)
@@ -145,15 +147,48 @@ class QueryRouter:
                 self._evict(r, "stale_lease")
         return list(self.replicas)
 
+    # -- trace propagation ----------------------------------------------------
+    @staticmethod
+    def _edge_ctx(header: str | None = None):
+        """Trace context for one request at the router edge: adopt the
+        caller's traceparent header (as a child hop) when one rode in on
+        the request, mint a fresh context otherwise.  ``None`` while obs is
+        disabled, so an untraced deployment pays nothing here."""
+        if not _OBS_STATE.enabled:
+            return None
+        if header:
+            ctx = obs_trace.TraceContext.from_header(header)
+            if ctx is not None:
+                return ctx.child()
+        return obs_trace.TraceContext.mint()
+
     # -- writes (single-writer: always the primary) ---------------------------
     def submit(self, op: int, a: int, b: int) -> WriteAck | Overloaded:
         """May return ``Overloaded`` when the primary runs pipelined ingest
-        and its bounded pending queue is full — the client retries."""
-        return self.primary.submit(op, a, b)
+        and its bounded pending queue is full — the client retries.  Each
+        write is admitted under a router-minted trace context: the primary
+        stamps it into the WAL (``# trace`` annotation) so replica applies
+        join the trace, and a real ack carries the traceparent header
+        back to the client."""
+        ctx = self._edge_ctx()
+        with obs_trace.TRACER.bind(ctx):
+            with obs_trace.span("router.write", op=op):
+                ack = self.primary.submit(op, a, b)
+        if ctx is not None and isinstance(ack, WriteAck):
+            ack = dataclasses.replace(ack, trace=ctx.to_header())
+        return ack
 
     def submit_many(self, updates) -> list[WriteAck]:
-        """Batch write to the primary (drains cooperatively when pipelined)."""
-        return self.primary.submit_many(updates)
+        """Batch write to the primary (drains cooperatively when pipelined);
+        the whole batch shares one router-minted trace context."""
+        ctx = self._edge_ctx()
+        with obs_trace.TRACER.bind(ctx):
+            with obs_trace.span("router.write_many", n=len(updates)):
+                acks = self.primary.submit_many(updates)
+        if ctx is not None:
+            header = ctx.to_header()
+            acks = [dataclasses.replace(a, trace=header) for a in acks]
+        return acks
 
     def session(self) -> Session:
         """Open a read-your-writes session bound to this router."""
@@ -218,7 +253,22 @@ class QueryRouter:
 
     def route(self, req: QueryRequest, token: int = 0) -> QueryResponse:
         """Dispatch one read under its consistency policy; the response is
-        stamped with the node that served it."""
+        stamped with the node that served it.  The read runs under a trace
+        context — adopted from ``req.trace`` when the client sent one,
+        minted here otherwise — so the serving node's ``query`` span joins
+        the same trace as the router hop."""
+        ctx = self._edge_ctx(req.trace)
+        if ctx is None:
+            return self._route(req, token)
+        if req.trace is None:
+            req = dataclasses.replace(req, trace=ctx.to_header())
+        with obs_trace.TRACER.bind(ctx):
+            with obs_trace.span("router.route", kind=req.kind,
+                                consistency=req.consistency):
+                return self._route(req, token)
+
+    def _route(self, req: QueryRequest, token: int = 0) -> QueryResponse:
+        """Policy dispatch body (see ``route``)."""
         if req.consistency == STRONG:
             node, name = self.primary, "primary"
         else:

@@ -89,15 +89,19 @@ class Fault:
 
 
 def seeded_schedule(seed: int, n_faults: int = 1, kinds=FAULT_KINDS,
-                    at_range: tuple[int, int] = (2, 30)) -> list[Fault]:
+                    at_range: tuple[int, int] = (2, 30),
+                    sticky: bool = False) -> list[Fault]:
     """A deterministic fault schedule: ``seed`` fully determines the kinds,
     firing indices and detail args.  ``at_range`` bounds the per-op-type
     firing index (the default skips the store-construction prefix so
-    faults land mid-workload)."""
+    faults land mid-workload).  ``sticky=True`` turns every fault into a
+    persistent outage (it keeps firing once reached) — that is what drives
+    the circuit breaker open rather than being absorbed by one retry."""
     rng = random.Random(seed)
     return [Fault(kind=rng.choice(tuple(kinds)),
                   at=rng.randrange(*at_range),
-                  arg=rng.randrange(1 << 16))
+                  arg=rng.randrange(1 << 16),
+                  sticky=sticky)
             for _ in range(n_faults)]
 
 

@@ -55,13 +55,15 @@ import time
 import numpy as np
 
 from ..cluster import QueryRouter, Replica, query_from_record
+from ..core.peel import set_wave_profile as _set_wave_profile
 from ..data.streams import READ, GraphUpdateStream, MixedWorkloadStream
 from ..data.synthetic import powerlaw_graph
 from ..faults import FaultyIO, RetryPolicy, seeded_schedule
-from ..obs import expo, profiling, trace
+from ..obs import expo, flightrec, is_enabled, profiling, slo, trace
 from ..service import (COMMUNITY, CONSISTENCY_LEVELS, MAX_K, MEMBERS,
                        REPRESENTATIVES, Overloaded, QueryRequest,
                        TrussService, TrussStore)
+from ..service.api import Unavailable
 
 
 def _pipeline_kw(args) -> dict:
@@ -80,7 +82,8 @@ def _make_store(path: str | None, args) -> TrussStore | None:
         return None
     io = None
     if getattr(args, "chaos_seed", None) is not None:
-        faults = seeded_schedule(args.chaos_seed, n_faults=args.chaos_faults)
+        faults = seeded_schedule(args.chaos_seed, n_faults=args.chaos_faults,
+                                 sticky=getattr(args, "chaos_sticky", False))
         io = FaultyIO(faults)
         print(f"chaos: seed {args.chaos_seed} -> "
               + ", ".join(f"{f.kind}@{f.op}[{f.at}]" for f in faults))
@@ -106,6 +109,64 @@ def _submit_retry(sink, op: int, a: int, b: int,
     raise RuntimeError(
         f"write ({op},{a},{b}) still shed after {policy.max_attempts} "
         f"attempts (last reason: {ack.reason})")
+
+
+def _health_callback(slo_engine: slo.SLOEngine, cell: dict):
+    """Build the ``/healthz`` callback: the SLO engine's verdict, overlaid
+    with the primary's live degradation state — a breaker-open/quarantined
+    service reports ``violated`` immediately instead of waiting for the
+    burn-rate windows to catch up."""
+    def _health():
+        """One health probe (``MetricsServer`` calls this per request)."""
+        h = slo_engine.health()
+        svc = cell.get("svc")
+        if svc is not None and svc._degraded_reason is not None:
+            h = {**h, "status": "violated",
+                 "degraded": svc._degraded_reason}
+        return h
+    return _health
+
+
+def _wire_operability(svc: TrussService | None, slo_engine: slo.SLOEngine,
+                      cell: dict):
+    """Attach the SLO engine to the serving primary and register the
+    flight recorder's postmortem bundle providers: commit frontier, engine
+    config, store scrub report, SLO state, and the chaos schedule when a
+    seeded ``FaultyIO`` is driving the store."""
+    if svc is None:
+        return
+    cell["svc"] = svc
+    svc.attach_slo(slo_engine)
+    store = svc.store
+
+    def _frontier():
+        """Committed frontier at dump time."""
+        return {"gen": svc.gen, "wal_applied": svc._applied_wal,
+                "wal_len": store.wal_len if store is not None else 0}
+
+    def _config():
+        """Engine configuration at dump time."""
+        return {"n_nodes": svc.graph.spec.n_nodes,
+                "flush_every": svc.flush_every, "pipeline": svc.pipeline,
+                "indexed": svc.indexed, "strategy": svc.strategy,
+                "tracked_ks": [int(k) for k in svc.graph.index.tracked]}
+
+    def _scrub():
+        """Durability scrub (store-level only — the engine-level scrub
+        would recursively trip the recorder on a violation)."""
+        return store.scrub() if store is not None else None
+
+    def _chaos():
+        """Remaining + already-injected faults of a seeded ``FaultyIO``."""
+        io = getattr(store, "_io", None) if store is not None else None
+        if io is None or not isinstance(io, FaultyIO):
+            return None
+        return {"injected": dict(io.injected),
+                "pending": [f"{f.kind}@{f.op}[{f.at}]" for f in io.faults]}
+
+    flightrec.FLIGHT.configure(frontier=_frontier, config=_config,
+                               scrub=_scrub, slo=slo_engine.state_dict,
+                               chaos_schedule=_chaos)
 
 
 def _primary_of(obj) -> TrussService | None:
@@ -152,11 +213,12 @@ def _query_mix(svc: TrussService, ks, rng) -> list[QueryRequest]:
     return reqs
 
 
-def _run_replica(args, ks, rng):
+def _run_replica(args, ks, rng, slo_engine, cell):
     """Tail a store as a read replica: poll, answer the query mix, report
     lag; the primary (or a static store) lives elsewhere."""
     rep = Replica(args.replica_of, replica_id=f"replica-{os.getpid()}",
                   indexed=not args.no_index)
+    _wire_operability(rep.svc, slo_engine, cell)
     for tick in range(args.ticks):
         gen = rep.poll()
         answered = []
@@ -174,7 +236,7 @@ def _run_replica(args, ks, rng):
     return rep
 
 
-def _run_router(args, ks, rng):
+def _run_router(args, ks, rng, slo_engine, cell):
     """Primary + N in-process replicas behind the consistency-aware router,
     driven by the mixed zipfian read/write workload."""
     if not args.store:
@@ -196,6 +258,7 @@ def _run_router(args, ks, rng):
                                store=_make_store(args.store, args),
                                indexed=not args.no_index,
                                **_pipeline_kw(args))
+    _wire_operability(primary, slo_engine, cell)
     replicas = [Replica(args.store, f"replica-{i}",
                         indexed=not args.no_index)
                 for i in range(args.replicas)]
@@ -295,6 +358,19 @@ def main(argv=None):
     ap.add_argument("--trace-out", default=None, metavar="FILE",
                     help="write the span ring as Chrome trace_event JSON "
                          "on exit (chrome://tracing / Perfetto)")
+    ap.add_argument("--trace-jsonl", default=None, metavar="FILE",
+                    help="stream spans to FILE as JSONL with a clock-sync "
+                         "header — merge per-process files with "
+                         "python -m repro.obs.merge")
+    ap.add_argument("--postmortem-dir", default=None, metavar="DIR",
+                    help="arm the flight recorder: dump a self-contained "
+                         "postmortem bundle under DIR when the degradation "
+                         "ladder fires (breaker open, quarantine, scrub or "
+                         "SLO violation)")
+    ap.add_argument("--wave-profile", action="store_true",
+                    help="per-wave peel timing: host-stepped waves feed the "
+                         "truss_peel_wave_seconds histogram (adds one "
+                         "device sync per wave — measurement mode)")
     ap.add_argument("--profile-dir", default=None, metavar="DIR",
                     help="arm jax.profiler captures around the flush and "
                          "decompose regions; traces land under DIR")
@@ -304,45 +380,76 @@ def main(argv=None):
                          "exercises the recovery ladder end to end")
     ap.add_argument("--chaos-faults", type=int, default=3,
                     help="number of faults in the --chaos-seed schedule")
+    ap.add_argument("--chaos-sticky", action="store_true",
+                    help="make the --chaos-seed faults persistent outages "
+                         "(keep firing once reached) — drives the breaker "
+                         "open and, with --postmortem-dir, dumps a bundle")
     ap.add_argument("--scrub", action="store_true",
                     help="run the end-to-end integrity scrub (WAL checksums, "
                          "snapshot digests, phi invariants) after the drive "
                          "loop; violations exit 4")
+    ap.add_argument("--linger", type=float, default=0.0, metavar="SECONDS",
+                    help="keep the process (and with --metrics-port the "
+                         "/metrics + /healthz server) alive this long after "
+                         "the drive loop — lets probes observe the final "
+                         "serving state before exit")
     args = ap.parse_args(argv)
 
     ks = tuple(int(k) for k in args.ks.split(","))
     rng = np.random.default_rng(args.seed)
 
+    slo_engine = slo.SLOEngine()
+    cell: dict = {"svc": None}  # _wire_operability fills in the primary
     metrics_server = None
     if args.metrics_port is not None:
-        metrics_server = expo.MetricsServer(port=args.metrics_port)
+        metrics_server = expo.MetricsServer(
+            port=args.metrics_port, health=_health_callback(slo_engine, cell))
         metrics_server.start()
         print(f"metrics: http://127.0.0.1:{metrics_server.port}/metrics")
     if args.profile_dir is not None:
         profiling.configure(args.profile_dir)
+    if args.postmortem_dir is not None:
+        flightrec.FLIGHT.configure(args.postmortem_dir)
+    if args.wave_profile:
+        _set_wave_profile(True)
+    writer = None
+    if args.trace_jsonl is not None:
+        proc = ("replica" if args.replica_of else
+                "router" if args.router else "primary")
+        writer = trace.TraceWriter(args.trace_jsonl, proc=proc)
     try:
-        obj = _dispatch(args, ks, rng)
+        obj = _dispatch(args, ks, rng, slo_engine, cell)
         # stashed for the __main__ wrapper; callers that import main() keep
         # getting the service/router/replica object back unchanged
         obj.exit_code = _exit_code(obj, scrub=args.scrub)
+        if args.linger > 0:
+            print(f"linger: holding final state for {args.linger}s")
+            time.sleep(args.linger)
         return obj
     finally:
         if args.trace_out is not None:
             trace.write_chrome(args.trace_out)
             print(f"trace -> {args.trace_out} "
                   f"({len(trace.TRACER.events())} spans)")
+        if writer is not None:
+            writer.close()
+            print(f"trace jsonl -> {args.trace_jsonl}")
+        if flightrec.FLIGHT.dumps:
+            print(f"postmortem: {len(flightrec.FLIGHT.dumps)} bundle(s) -> "
+                  f"{args.postmortem_dir}")
         if metrics_server is not None:
             metrics_server.stop()
         profiling.configure(None)
+        _set_wave_profile(False)
 
 
-def _dispatch(args, ks, rng):
+def _dispatch(args, ks, rng, slo_engine, cell):
     """Run the selected serving mode (split from ``main`` so the telemetry
     plumbing wraps every mode uniformly)."""
     if args.replica_of:
-        return _run_replica(args, ks, rng)
+        return _run_replica(args, ks, rng, slo_engine, cell)
     if args.router:
-        return _run_router(args, ks, rng)
+        return _run_router(args, ks, rng, slo_engine, cell)
 
     if args.restore:
         if not args.store:
@@ -380,28 +487,51 @@ def _dispatch(args, ks, rng):
                            indexed=not args.no_index, **_pipeline_kw(args))
         stream = GraphUpdateStream(edges, args.nodes, chunk=args.chunk,
                                    seed=args.seed + 1)
+    _wire_operability(svc, slo_engine, cell)
 
     lat: list[float] = []
+    shed_ticks = 0
     for tick in range(args.ticks):
-        ups = stream.next()
-        svc.submit_many([tuple(map(int, r)) for r in ups])
-        answered = []
-        for req in _query_mix(svc, ks, rng):
-            t0 = time.perf_counter()
-            resp = svc.handle(req)
-            lat.append(time.perf_counter() - t0)
-            answered.append((req.kind, resp.value if resp.value is not None
-                             else resp.n_edges))
+        # one trace context per tick at the CLI edge: the tick's writes
+        # annotate their generations in the WAL and its spans share one
+        # trace id (repro.obs.merge joins replica applies on it)
+        ctx = trace.TraceContext.mint() if is_enabled() else None
+        with trace.TRACER.bind(ctx):
+            ups = stream.next()
+            try:
+                svc.submit_many([tuple(map(int, r)) for r in ups])
+            except (Unavailable, OSError) as exc:
+                # degraded mode is a serving state, not a crash: the tick's
+                # writes are shed (nothing acked), committed reads keep
+                # serving, and a later tick may ride a half-open recovery
+                shed_ticks += 1
+                print(f"tick {tick}: writes shed ({exc!r})")
+                continue
+            answered = []
+            for req in _query_mix(svc, ks, rng):
+                t0 = time.perf_counter()
+                resp = svc.handle(req)
+                lat.append(time.perf_counter() - t0)
+                answered.append((req.kind,
+                                 resp.value if resp.value is not None
+                                 else resp.n_edges))
         print(f"tick {tick}: +{len(ups)} writes -> gen {svc.gen}; " +
               " ".join(f"{k}={v}" for k, v in answered))
+    if shed_ticks:
+        print(f"degraded: {shed_ticks}/{args.ticks} ticks shed")
 
     if lat:
         ms = np.asarray(sorted(lat)) * 1e3
         print(f"\n{len(lat)} queries: p50={np.percentile(ms, 50):.2f}ms "
               f"p99={np.percentile(ms, 99):.2f}ms")
     if svc.store is not None:
-        path = svc.snapshot(stream_state=stream.state_dict())
-        print(f"snapshot -> {path} (wal_len={svc.store.wal_len})")
+        try:
+            path = svc.snapshot(stream_state=stream.state_dict())
+            print(f"snapshot -> {path} (wal_len={svc.store.wal_len})")
+        except (Unavailable, OSError) as exc:
+            # a chaos fault landing on the shutdown snapshot is survivable:
+            # the WAL holds everything, the next restore replays it
+            print(f"snapshot failed ({exc!r}) — WAL remains authoritative")
     print(f"final: {svc.stats()}")
     return svc
 

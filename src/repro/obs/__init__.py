@@ -11,9 +11,17 @@ through every hot path of the serving stack:
   (``TraceWriter``) and Chrome ``trace_event`` export, so the pipelined
   flush→dispatch→land overlap is visually inspectable;
 * ``obs.expo`` — Prometheus text rendering, a round-trip parser, and the
-  stdlib HTTP ``MetricsServer`` behind ``serve_truss --metrics-port``;
+  stdlib HTTP ``MetricsServer`` behind ``serve_truss --metrics-port``
+  (``/metrics`` + the SLO-backed ``/healthz``);
 * ``obs.profiling`` — gated ``jax.profiler`` start/stop hooks around flush
-  and decompose (``--profile-dir``).
+  and decompose (``--profile-dir``);
+* ``obs.slo`` — declarative objectives evaluated with multi-window
+  burn-rate over the live registry (``truss_slo_*``, ``stats()["slo"]``,
+  ``/healthz``);
+* ``obs.flightrec`` — the always-on flight recorder that dumps postmortem
+  bundles to ``--postmortem-dir`` when the degradation ladder fires;
+* ``obs.merge`` — cross-process JSONL trace merging into one wall-aligned
+  Chrome trace (clock-sync headers written by ``trace.TraceWriter``).
 
 The whole plane gates on one process-wide flag: ``with obs.disabled():``
 turns every record into a single attribute check, which is how
@@ -26,7 +34,8 @@ from __future__ import annotations
 
 from contextlib import contextmanager
 
-from . import expo, metrics, profiling, trace  # noqa: F401 — re-exports
+from . import (expo, flightrec, merge, metrics,  # noqa: F401 — re-exports
+               profiling, slo, trace)
 from .state import STATE
 
 

@@ -9,11 +9,16 @@ round-trip gate that keeps the format honest.
 
 ``MetricsServer`` is the ``serve_truss --metrics-port`` backend: a
 stdlib ``ThreadingHTTPServer`` on a daemon thread serving ``GET /metrics``
-(port 0 picks a free port; read it back from ``.port``).  No third-party
+plus ``GET /healthz`` (port 0 picks a free port; read it back from
+``.port``).  ``/healthz`` reports the SLO engine's verdict — HTTP 200 with
+``{"status": "ok"}`` while every objective is healthy, HTTP 503 with
+``burning``/``violated`` otherwise — via an injectable ``health`` callback
+(``repro.obs.slo.SLOEngine.health`` in the serving stack).  No third-party
 client library anywhere.
 """
 from __future__ import annotations
 
+import json
 import math
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
@@ -172,13 +177,19 @@ def parse(text: str) -> dict:
 
 
 class _Handler(BaseHTTPRequestHandler):
-    """GET /metrics -> exposition text; anything else -> 404.  Quiet logs."""
+    """GET /metrics -> exposition text; GET /healthz -> SLO verdict JSON;
+    anything else -> 404.  Quiet logs."""
 
     registry: Registry = REGISTRY
+    health = None  # zero-arg callable -> status str | dict with "status"
 
     def do_GET(self):  # noqa: N802 — BaseHTTPRequestHandler API
-        """Serve one scrape."""
-        if self.path.split("?")[0] != "/metrics":
+        """Serve one scrape or health probe."""
+        path = self.path.split("?")[0]
+        if path == "/healthz":
+            self._serve_health()
+            return
+        if path != "/metrics":
             self.send_response(404)
             self.end_headers()
             return
@@ -189,18 +200,35 @@ class _Handler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(body)
 
+    def _serve_health(self):
+        """200 while status == "ok", 503 while burning/violated (so load
+        balancers and the smoke test can react without parsing)."""
+        cb = type(self).health
+        state = cb() if cb is not None else {"status": "ok"}
+        if isinstance(state, str):
+            state = {"status": state}
+        body = json.dumps(state).encode()
+        self.send_response(200 if state.get("status") == "ok" else 503)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
     def log_message(self, *args):
         """Suppress per-request stderr logging."""
 
 
 class MetricsServer:
-    """Daemon-thread HTTP server exposing one registry at ``/metrics``."""
+    """Daemon-thread HTTP server exposing one registry at ``/metrics`` and
+    an optional health callback at ``/healthz``."""
 
     def __init__(self, port: int = 0, host: str = "127.0.0.1",
-                 registry: Registry | None = None):
+                 registry: Registry | None = None, health=None):
         handler = type("BoundHandler", (_Handler,),
                        {"registry": registry if registry is not None
-                        else REGISTRY})
+                        else REGISTRY,
+                        "health": staticmethod(health) if health is not None
+                        else None})
         self._httpd = ThreadingHTTPServer((host, int(port)), handler)
         self._httpd.daemon_threads = True
         self._thread: threading.Thread | None = None

@@ -26,10 +26,61 @@ Recording is a no-op (a shared null span) while ``repro.obs`` is disabled.
 from __future__ import annotations
 
 import json
+import os
 import time
+from contextlib import contextmanager
 from typing import NamedTuple
 
+from . import metrics as _metrics
 from .state import STATE
+
+_DROPPED_N = _metrics.counter(
+    "truss_trace_dropped_total",
+    "spans overwritten by trace ring wrap-around (never re-exportable)")
+_RING_HW_G = _metrics.gauge(
+    "truss_trace_ring_highwater",
+    "high-water mark of buffered spans in the trace ring")
+
+
+class TraceContext(NamedTuple):
+    """W3C-traceparent-style identity for one end-to-end request.
+
+    ``trace_id`` (32 lowercase hex chars) names the whole router -> primary
+    -> replica journey; ``span_id`` (16 hex chars) names the hop that is
+    currently propagating it.  Minted once at the serving edge
+    (``QueryRouter``/``serve_truss``), carried on ``QueryRequest``/
+    ``WriteAck``, stamped into the WAL as an annotation record, and bound
+    onto a tracer (``Tracer.bind``) so every span recorded under it carries
+    a ``trace_id`` attribute that ``repro.obs.merge`` can join on.
+    """
+
+    trace_id: str
+    span_id: str
+
+    @classmethod
+    def mint(cls) -> "TraceContext":
+        """A fresh random context (new trace id, new span id)."""
+        return cls(os.urandom(16).hex(), os.urandom(8).hex())
+
+    def child(self) -> "TraceContext":
+        """Same trace, new hop id — what a downstream component binds."""
+        return TraceContext(self.trace_id, os.urandom(8).hex())
+
+    def to_header(self) -> str:
+        """``00-<trace_id>-<span_id>-01`` traceparent wire form."""
+        return f"00-{self.trace_id}-{self.span_id}-01"
+
+    @classmethod
+    def from_header(cls, header: str) -> "TraceContext | None":
+        """Parse a traceparent header; ``None`` when malformed."""
+        parts = header.strip().split("-")
+        if len(parts) != 4 or len(parts[1]) != 32 or len(parts[2]) != 16:
+            return None
+        try:
+            int(parts[1], 16), int(parts[2], 16)
+        except ValueError:
+            return None
+        return cls(parts[1], parts[2])
 
 
 class SpanEvent(NamedTuple):
@@ -105,6 +156,24 @@ class Tracer:
         self._n = 0          # total events ever recorded
         self._seq = 0        # span ids handed out
         self._stack: list[int] = []
+        self._hw = 0         # ring-occupancy high-water (never resets)
+        self._ctx: TraceContext | None = None
+
+    @property
+    def ctx(self) -> "TraceContext | None":
+        """The currently bound trace context (``None`` outside ``bind``)."""
+        return self._ctx
+
+    @contextmanager
+    def bind(self, ctx: "TraceContext | None"):
+        """Bind a trace context for the duration of the block: every span
+        and instant recorded inside carries a ``trace_id`` attribute.
+        Binding ``None`` is a no-op passthrough (callers need not branch)."""
+        prev, self._ctx = self._ctx, (ctx if ctx is not None else self._ctx)
+        try:
+            yield ctx
+        finally:
+            self._ctx = prev
 
     def span(self, name: str, **attrs) -> "_Span | _NullSpan":
         """Open a context-managed span (null span while obs is disabled)."""
@@ -123,8 +192,19 @@ class Tracer:
                                self.clock(), 0, attrs or None))
 
     def _record(self, ev: SpanEvent):
-        self._buf[self._n % self.capacity] = ev
-        self._n += 1
+        ctx = self._ctx
+        if ctx is not None and (ev.attrs is None
+                                or "trace_id" not in ev.attrs):
+            ev = ev._replace(attrs={**(ev.attrs or {}),
+                                    "trace_id": ctx.trace_id})
+        n = self._n
+        if n >= self.capacity:
+            _DROPPED_N.inc()
+        self._buf[n % self.capacity] = ev
+        self._n = n + 1
+        if self._hw < self.capacity and n + 1 > self._hw:
+            self._hw = n + 1
+            _RING_HW_G.set(min(self._hw, self.capacity))
 
     def events(self) -> list[SpanEvent]:
         """Buffered events in recording (completion) order, oldest first."""
@@ -168,13 +248,28 @@ class TraceWriter:
     """Incremental JSONL emitter: ``drain()`` appends events recorded since
     the previous drain (by ``seq`` high-water mark) to ``path``, one JSON
     object per line.  Survives ring wrap — wrapped-away events are simply
-    gone, never re-written."""
+    gone, never re-written.
 
-    def __init__(self, path: str, tracer: Tracer | None = None):
+    The first line of a fresh file is a ``clock_sync`` header pairing this
+    process's wall clock (``time.time_ns``) with its span clock
+    (``time.perf_counter_ns``) at the same instant, plus the pid and an
+    optional ``proc`` label.  ``repro.obs.merge`` uses the pair to rebase
+    every process's monotonic span timestamps onto one shared wall
+    timeline, which is what makes cross-process Chrome traces line up.
+    """
+
+    def __init__(self, path: str, tracer: Tracer | None = None,
+                 proc: str = ""):
         self.path = path
         self.tracer = tracer if tracer is not None else TRACER
         self._f = open(path, "a")
         self._written_seq = -1
+        if self._f.tell() == 0:
+            self._f.write(json.dumps({
+                "clock_sync": {"wall_ns": time.time_ns(),
+                               "perf_ns": time.perf_counter_ns()},
+                "pid": os.getpid(), "proc": proc}) + "\n")
+            self._f.flush()
 
     def drain(self) -> int:
         """Append all new events; returns how many were written."""

@@ -41,9 +41,14 @@ class WriteRequest:
 class WriteAck:
     """Write is WAL-appended (durable against process crash; fsynced to
     disk at the next generation flush or snapshot) and will commit in
-    generation ``gen``; ``wal_index`` is its position in the log."""
+    generation ``gen``; ``wal_index`` is its position in the log.
+    ``trace`` is the traceparent header (``00-<trace_id>-<span_id>-01``) of
+    the distributed trace the write was admitted under, when one was bound
+    at the serving edge — clients propagate it to correlate their retries
+    and follow-up reads with the server-side spans."""
     gen: int
     wal_index: int
+    trace: str | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +89,7 @@ class QueryRequest:
     edge: tuple[int, int] | None = None      # COMMUNITY seed / MAX_K target
     consistency: str = STRONG                # routing policy (cluster only)
     bound: int = 0                           # max staleness gens (BOUNDED)
+    trace: str | None = None                 # traceparent header, if traced
 
     def __post_init__(self):
         if self.kind not in QUERY_KINDS:

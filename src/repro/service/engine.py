@@ -90,6 +90,7 @@ from ..core.maintenance import OP_INSERT
 from ..core.peel import stats_dict as peel_stats_dict
 from ..faults.retry import (CLOSED, CircuitBreaker, RetryExhausted,
                             RetryPolicy)
+from ..obs import flightrec as obs_flightrec
 from ..obs import metrics as obs_metrics, profiling as obs_profiling
 from ..obs import trace as obs_trace
 from .api import (COMMUNITY, MAX_K, MEMBERS, REPRESENTATIVES, Overloaded,
@@ -132,6 +133,10 @@ _EDGES_G = obs_metrics.gauge(
 _QUERY_S = obs_metrics.histogram(
     "truss_query_seconds", "query latency by kind (flush-inclusive)",
     labels=("kind",))
+_WRITE_ACK_S = obs_metrics.histogram(
+    "truss_write_ack_seconds",
+    "write admission-to-ack latency (WAL append inclusive; batch submits "
+    "observe one sample for the whole batch)")
 _BREAKER_G = obs_metrics.gauge(
     "truss_breaker_state",
     "circuit-breaker state (0 closed, 1 half-open, 2 open)")
@@ -235,6 +240,8 @@ class TrussService:
             max_attempts=3, base_ms=0.5, cap_ms=20.0, scope="fsync")
         self._degraded_reason: str | None = None
         self._needs_heal = False
+        self.slo = None              # attach_slo wires the burn-rate engine
+        self._annotated_gen: int | None = None  # last WAL-annotated gen
         # gen -> {"n", "records", "reason", "status"}; status flips to
         # "recovered" once the generation commits after all
         self._quarantined: dict[int, dict] = {}
@@ -340,11 +347,16 @@ class TrussService:
         ``Overloaded(reason=...)``, committed reads keep serving."""
         if self.breaker.state != "open":
             self.breaker.trip()
+        first = self._degraded_reason is None
         self._degraded_reason = reason
         _BREAKER_G.set(self.breaker.state_code)
         _DEGRADED_N.labels(reason=reason).inc()
         obs_trace.instant("service.degraded", reason=reason,
                           err="" if exc is None else repr(exc)[:120])
+        if first:  # one bundle per healthy->degraded transition, not per shed
+            obs_flightrec.FLIGHT.trip(
+                "breaker_open", reason=reason, gen=self.gen,
+                err="" if exc is None else repr(exc)[:200])
 
     def _recovered(self):
         """Leave degraded mode after a definitive success: close the
@@ -447,6 +459,8 @@ class TrussService:
                 self.store.write_quarantine_gen(gen, records, reason)
             except OSError:
                 pass  # sidecar is advisory; the WAL already has the records
+        obs_flightrec.FLIGHT.trip("quarantine", gen=gen, n=len(records),
+                                  reason=reason)
         self._degrade("poisoned", exc)
 
     def _self_heal(self) -> bool:
@@ -476,7 +490,9 @@ class TrussService:
                 self._pending = []
                 self._inflight = None
                 self._stats_seen = None
-                self._replay(self.store.read_wal(start=self._applied_wal))
+                self._replay(
+                    self.store.read_wal(start=self._applied_wal),
+                    annotations=self.store.read_trace_annotations())
                 self._open_gen = self.gen + 1
                 self._open_count = 0
                 try:
@@ -494,6 +510,29 @@ class TrussService:
         self._recovered()
         self._capture_committed()  # _replay skips it when the tail is empty
         return True
+
+    def attach_slo(self, engine) -> "TrussService":
+        """Wire a ``repro.obs.slo.SLOEngine``: it is evaluated (internally
+        rate-limited) at every commit and inside ``stats()``, which then
+        reports ``stats()["slo"]``.  Returns self for chaining."""
+        self.slo = engine
+        return self
+
+    def _annotate_gen(self, gen: int):
+        """Stamp the currently bound trace context into the WAL as a
+        ``# trace`` annotation, once per generation and *before* the
+        generation's first record — tailers learn the originating trace id
+        ahead of the group they will replay, so replica apply spans join
+        the writer's trace.  Advisory: an annotation append failure never
+        fails the write it precedes (the record append decides the ack)."""
+        ctx = obs_trace.TRACER.ctx
+        if ctx is None or self.store is None or gen == self._annotated_gen:
+            return
+        try:
+            self.store.append_annotation(gen, ctx.trace_id)
+            self._annotated_gen = gen
+        except OSError:
+            pass
 
     # -- writes ---------------------------------------------------------------
     @staticmethod
@@ -528,7 +567,9 @@ class TrussService:
             return self._shed()
         if self._needs_heal and not self._self_heal():
             return self._shed()
+        t0 = time.perf_counter()
         key = self._admit(self._view, op, a, b)
+        self._annotate_gen(self.gen + 1)
         # WAL first: if the append fails (disk full, closed store) the view
         # and pending queue are untouched and the submit can be retried
         try:
@@ -543,6 +584,7 @@ class TrussService:
         else:
             self._view.discard(key)
         ack = WriteAck(gen=self.gen + 1, wal_index=wal_index)
+        _WRITE_ACK_S.observe(time.perf_counter() - t0)
         self._pending.append((op, a, b))
         if len(self._pending) >= self.flush_every:
             self.flush()
@@ -570,8 +612,10 @@ class TrussService:
                               queue=len(self._pending))
             retry = 1e3 * (self._ewma_gen_s or 1e-3)
             return Overloaded(retry_after_ms=retry, gen=self.gen)
+        t0 = time.perf_counter()
         key = self._admit(self._view, op, a, b)
         gen = self._open_gen
+        self._annotate_gen(gen)
         # WAL first (acked-before-applied): a failed append leaves the view
         # and queue untouched, so the submit can simply be retried
         try:
@@ -585,6 +629,7 @@ class TrussService:
             self._view.add(key)
         else:
             self._view.discard(key)
+        _WRITE_ACK_S.observe(time.perf_counter() - t0)
         self._pending.append((gen, op, a, b))
         self._open_count += 1
         if self._open_count >= self._flush_target:
@@ -683,6 +728,11 @@ class TrussService:
         self._applied_wal += n
         peel = self._record_commit_metrics(n, dur_s)
         self._capture_committed(peel)
+        obs_flightrec.FLIGHT.note("commit", gen=self.gen, n=n,
+                                  wal=self._applied_wal)
+        obs_flightrec.FLIGHT.tick()
+        if self.slo is not None:
+            self.slo.evaluate()
         if self.store is not None:
             try:
                 self.store.publish_commit(self.gen, self._applied_wal)
@@ -817,6 +867,9 @@ class TrussService:
             if pend >= self.flush_every:  # mirror submit's auto-flush
                 gen += 1
                 pend = 0
+        t0 = time.perf_counter()
+        for g in dict.fromkeys(t[0] for t in tagged):
+            self._annotate_gen(g)
         # WAL first (one write, rollback on failure leaves nothing acked)
         try:
             start = (self.store.append_tagged(tagged)
@@ -824,6 +877,7 @@ class TrussService:
         except OSError as exc:
             self._append_failed(exc)
             raise
+        _WRITE_ACK_S.observe(time.perf_counter() - t0)
         self._view = view
         acks = []
         for i, (tag, op, a, b) in enumerate(tagged):
@@ -856,6 +910,9 @@ class TrussService:
             if cnt >= target:
                 gen += 1
                 cnt = 0
+        t0 = time.perf_counter()
+        for g in dict.fromkeys(t[0] for t in tagged):
+            self._annotate_gen(g)
         # WAL first (one write, rollback on failure leaves nothing acked)
         try:
             start = (self.store.append_tagged(tagged)
@@ -863,6 +920,7 @@ class TrussService:
         except OSError as exc:
             self._append_failed(exc)
             raise
+        _WRITE_ACK_S.observe(time.perf_counter() - t0)
         self._view = view
         acks = []
         for i, (tag, op, a, b) in enumerate(tagged):
@@ -1151,7 +1209,8 @@ class TrussService:
                                       max_pending=max_pending, chaos=chaos,
                                       breaker=breaker, retry=retry)
         start = svc._applied_wal
-        svc._replay(store.read_wal(start=start))
+        svc._replay(store.read_wal(start=start),
+                    annotations=store.read_trace_annotations())
         # records past the snapshot's high-water mark that replay re-derived
         # (launchers use this to fast-forward deterministic input streams —
         # NOT wal_len - base, which under compact-to-prev retention counts
@@ -1160,29 +1219,40 @@ class TrussService:
         store.publish_commit(svc.gen, svc._applied_wal)
         return svc
 
-    def _replay(self, tail, max_groups: int | None = None) -> int:
+    def _replay(self, tail, max_groups: int | None = None,
+                annotations: dict | None = None) -> int:
         """Apply WAL-tail records grouped by their generation tag — the same
         batch boundaries the live service flushed at, so the replayed path
         runs the identical netted ``apply_batch`` sequence.  Advances
         ``_applied_wal`` per group, so a capped replay (``max_groups``, the
         cluster replica's incremental poll) always stops at a group
-        boundary and is resumable.  Returns the number of groups applied."""
+        boundary and is resumable.  Returns the number of groups applied.
+
+        ``annotations`` is the store's ``{gen: trace_id}`` map from WAL
+        ``# trace`` records: a group whose generation was annotated replays
+        under a child :class:`~repro.obs.trace.TraceContext` of the
+        originating write's trace, so ``gen.replay`` spans on a replica
+        join the trace the router minted."""
         groups = 0
         group: list = []
         group_gen = None
 
         def commit_group():
             nonlocal groups, group, group_gen
+            tid = annotations.get(group_gen) if annotations else None
+            ctx = (obs_trace.TraceContext(tid, os.urandom(8).hex())
+                   if tid is not None else None)
             t0 = time.perf_counter()
-            with obs_trace.span("gen.replay", gen=group_gen, n=len(group)):
+            with obs_trace.TRACER.bind(ctx), \
+                    obs_trace.span("gen.replay", gen=group_gen, n=len(group)):
                 # the guarded path gives replay the same delta->recompute
                 # fallback the live flush has (a tail that poisoned the
                 # primary engine still restores); GenerationPoisoned
                 # propagates to the caller — loud on restore, caught and
                 # reported by self-heal
                 self._guarded_apply(group, group_gen)
-            self._commit_generation(group_gen, len(group),
-                                    dur_s=time.perf_counter() - t0)
+                self._commit_generation(group_gen, len(group),
+                                        dur_s=time.perf_counter() - t0)
             groups += 1
             group, group_gen = [], None
 
@@ -1245,6 +1315,10 @@ class TrussService:
         report["degraded"] = self._degraded_reason
         report["quarantined"] = {int(g): m["status"]
                                  for g, m in self._quarantined.items()}
+        if not report["ok"]:
+            obs_flightrec.FLIGHT.trip(
+                "scrub_violation", gen=self.gen,
+                violations=list(report["violations"]))
         return report
 
     def stats(self) -> dict:
@@ -1276,6 +1350,9 @@ class TrussService:
                 g for g, m in self._quarantined.items()
                 if m["status"] == "quarantined"),
         }
+        if self.slo is not None:
+            self.slo.evaluate()
+            out["slo"] = self.slo.state_dict()
         if self.store is not None:
             # replication lag per tailer, from the lease files the replicas
             # publish on every poll (generations + WAL records behind us)

@@ -132,6 +132,7 @@ _QUARANTINE = "quarantine"
 _MANIFEST_SUFFIX = ".manifest.json"
 _PREV_SUFFIX = ".prev"
 _BASE_PREFIX = "# base "
+_TRACE_PREFIX = "# trace "
 
 
 class WalCorruptionError(RuntimeError):
@@ -190,6 +191,10 @@ class TrussStore:
         # global index) — replicas read this to tell a live append tail
         # from damage below the frontier
         self.stopped: tuple[str, int] | None = None
+        # trace annotations seen by scans/tailing: {gen: trace_id}.  These
+        # ride in the log as checksummed comment lines (``# trace ...``)
+        # and never count toward record indexing.
+        self._annots: dict[int, str] = {}
         valid_bytes = self._scan()
         if not readonly:
             self._repair_tail(valid_bytes)
@@ -219,11 +224,14 @@ class TrussStore:
                 if not line.endswith(b"\n"):
                     self.stopped = ("torn", self.base + self.wal_len)
                     break
-                status, _ = self._classify(line)
+                status, rec = self._classify(line)
                 if status == "corrupt":
                     self.stopped = ("corrupt", self.base + self.wal_len)
                     break
                 valid_bytes += len(line)
+                if status == "annot":
+                    self._annots[rec[0]] = rec[1]
+                    continue  # annotations are not records
                 self.wal_len += 1
         self.wal_len += self.base
         return valid_bytes
@@ -278,10 +286,31 @@ class TrussStore:
 
     @staticmethod
     def _classify(line: bytes):
-        """``("ok"|"legacy", record)`` for a valid v2/v1 line, else
-        ``("corrupt", None)``.  The v2 checksum field is tagged ``c`` so a
-        single-bit flip can never turn a v2 line into a well-formed v1
-        line (the tag survives any field merge)."""
+        """``("ok"|"legacy", record)`` for a valid v2/v1 line,
+        ``("annot", (gen, trace_id))`` for a checksummed ``# trace``
+        annotation, else ``("corrupt", None)``.  The v2 checksum field is
+        tagged ``c`` so a single-bit flip can never turn a v2 line into a
+        well-formed v1 line (the tag survives any field merge).
+        Annotations are comment lines, so readers that predate them (and
+        the v1 grammar) skip them without miscounting records."""
+        if line.startswith(_TRACE_PREFIX.encode()):
+            parts = line.split()
+            if len(parts) != 5:
+                return "corrupt", None
+            tag = parts[4]
+            if (len(tag) != 9 or not tag.startswith(b"c")
+                    or tag[1:].translate(None, b"0123456789abcdef")):
+                return "corrupt", None
+            if crc32c(b" ".join(parts[:4])) != int(tag[1:], 16):
+                return "corrupt", None
+            try:
+                gen = int(parts[2])
+            except ValueError:
+                return "corrupt", None
+            tid = parts[3]
+            if len(tid) != 32 or tid.translate(None, b"0123456789abcdef"):
+                return "corrupt", None
+            return "annot", (gen, tid.decode())
         parts = line.split()
         if len(parts) == 5:
             tag = parts[4]
@@ -308,9 +337,10 @@ class TrussStore:
 
     @classmethod
     def _parse(cls, line) -> tuple[int, int, int, int] | None:
-        """A valid record's ``(gen, op, a, b)``, else None (v1 or v2)."""
+        """A valid record's ``(gen, op, a, b)``, else None (v1 or v2;
+        annotations are not records)."""
         status, rec = cls._classify(line)
-        return rec if status != "corrupt" else None
+        return rec if status in ("ok", "legacy") else None
 
     @staticmethod
     def _parse_header(line: bytes) -> int | str | None:
@@ -384,6 +414,39 @@ class TrussStore:
         _APPEND_S.observe(time.perf_counter() - t0)
         _APPEND_RECS.inc(len(records))
         return start
+
+    def append_annotation(self, gen: int, trace_id: str):
+        """Append a ``# trace <gen> <trace_id>`` annotation: a checksummed
+        comment line binding generation ``gen`` to the distributed trace
+        that originated its writes.  Annotations never count toward
+        ``wal_len``/record indexing (legacy readers skip comment lines), so
+        the replication protocol and the commit frontier are untouched;
+        they ride the same rollback/verified-fsync path as records."""
+        self._check_writable()
+        body = f"{_TRACE_PREFIX.rstrip()} {int(gen)} {trace_id}"
+        data = f"{body} c{crc32c(body.encode()):08x}\n".encode()
+        offset = self._wal_f.tell()
+        try:
+            self._wal_f.write(data)
+            self._wal_f.flush()
+        except Exception:
+            try:
+                self._wal_f.close()
+            except Exception:
+                pass
+            self._io.truncate(self.wal_path, offset)
+            self._wal_f = self._io.open_append(self.wal_path)
+            self._tail_cache = None
+            raise
+        self._tail_records.append(data)
+        self._annots[int(gen)] = trace_id
+
+    def read_trace_annotations(self) -> dict[int, str]:
+        """``{gen: trace_id}`` for every annotation this store has seen
+        (populated by the open scan and by ``read_wal`` tailing — a replica
+        that polls the frontier sees each generation's annotation before
+        its records, because the writer appends it first)."""
+        return dict(self._annots)
 
     def fsync(self):
         """Force acknowledged records to disk (called at flush/snapshot).
@@ -481,12 +544,19 @@ class TrussStore:
             for line in f:
                 if stop is not None and idx >= stop:
                     break
-                rec = self._parse(line) if line.endswith(b"\n") else None
-                if rec is None:
-                    self.stopped = (
-                        "torn" if not line.endswith(b"\n") else "corrupt",
-                        idx)
+                if not line.endswith(b"\n"):
+                    self.stopped = ("torn", idx)
                     break
+                status, rec = self._classify(line)
+                if status == "corrupt":
+                    self.stopped = ("corrupt", idx)
+                    break
+                if status == "annot":
+                    # trace annotation: consume the bytes, note the gen ->
+                    # trace binding, but never advance the record index
+                    self._annots[rec[0]] = rec[1]
+                    pos += len(line)
+                    continue
                 if idx >= start:
                     out.append(rec)
                 pos += len(line)
@@ -666,7 +736,8 @@ class TrussStore:
                     if idx >= base:
                         break
                     pos += len(line)
-                    idx += 1
+                    if self._classify(line)[0] != "annot":
+                        idx += 1
                 f.seek(pos)
                 tail = f.read()
         fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".waltmp")
@@ -752,7 +823,8 @@ class TrussStore:
         live store; returns a report dict with an overall ``ok`` flag and
         bumps the scrub metric counters."""
         report: dict = {"ok": True}
-        wal = {"records": 0, "legacy": 0, "corrupt_at": None, "base": self.base}
+        wal = {"records": 0, "legacy": 0, "annotations": 0,
+               "corrupt_at": None, "base": self.base}
         if os.path.exists(self.wal_path):
             with open(self.wal_path, "rb") as f:
                 idx = 0
@@ -772,6 +844,9 @@ class TrussStore:
                     if status == "corrupt":
                         wal["corrupt_at"] = idx
                         break
+                    if status == "annot":
+                        wal["annotations"] += 1
+                        continue
                     wal["records"] += 1
                     if status == "legacy":
                         wal["legacy"] += 1

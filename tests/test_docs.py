@@ -12,14 +12,16 @@ import re
 
 from repro.service import TrussStore
 
-DOC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                   "docs", "WAL_FORMAT.md")
+_DOCS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                     "docs")
+DOC = os.path.join(_DOCS, "WAL_FORMAT.md")
+OBS_DOC = os.path.join(_DOCS, "OBSERVABILITY.md")
 
 
-def _fenced_blocks():
-    with open(DOC) as f:
+def _fenced_blocks(doc=DOC):
+    with open(doc) as f:
         text = f.read()
-    return [m.group(1) for m in re.finditer(r"```(?:json)?\n(.*?)```",
+    return [m.group(1) for m in re.finditer(r"```[a-z]*\n(.*?)```",
                                             text, re.S)]
 
 
@@ -102,6 +104,50 @@ def test_commit_json_doc_example_parses(tmp_path):
     got = TrussStore(str(root), readonly=True).read_commit()
     assert got == doc
     assert set(doc) == {"gen", "wal_len"}
+
+
+def test_trace_annotation_doc_example_parses(tmp_path):
+    """The trace-annotation spec in docs/OBSERVABILITY.md carries a fenced
+    WAL example with ``# trace`` lines; its exact documented bytes must
+    satisfy the real reader: annotations never count as records, and the
+    gen -> trace_id bindings round-trip."""
+    # the grammar line is also fenced; the concrete example names gen 1
+    block = next(b for b in _fenced_blocks(OBS_DOC)
+                 if b.startswith("# trace 1 "))
+    root = tmp_path / "annot"
+    os.makedirs(root)
+    with open(root / "wal.log", "w") as f:
+        f.write(block)
+    store = TrussStore(str(root), readonly=True)
+    lines = [ln for ln in block.splitlines() if ln.strip()]
+    rec_lines = [ln for ln in lines if not ln.startswith("#")]
+    annot_lines = [ln for ln in lines if ln.startswith("# trace ")]
+    assert len(annot_lines) >= 2, "spec lost its annotation examples"
+    # annotations are invisible to record indexing
+    assert store.wal_len == len(rec_lines)
+    assert len(store.read_wal()) == len(rec_lines)
+    # every documented binding round-trips through the reader
+    annots = store.read_trace_annotations()
+    for ln in annot_lines:
+        _hash, _kw, gen, trace_id, _crc = ln.split()
+        assert annots[int(gen)] == trace_id
+        assert len(trace_id) == 32 and int(trace_id, 16) >= 0
+    assert len(annots) == len(annot_lines)
+    # spec: a corrupted annotation bounds the readable prefix exactly like
+    # any other damaged WAL line; bindings before the damage survive
+    with open(root / "wal.log") as f:
+        text = f.read()
+    broken = text.replace("# trace 2", "# trace x", 1)
+    root2 = tmp_path / "annot-broken"
+    os.makedirs(root2)
+    with open(root2 / "wal.log", "w") as f:
+        f.write(broken)
+    store2 = TrussStore(str(root2), readonly=True)
+    n_before = sum(1 for ln in lines[:lines.index(annot_lines[1])]
+                   if not ln.startswith("#"))
+    assert store2.wal_len == n_before
+    assert len(store2.read_wal()) == n_before
+    assert set(store2.read_trace_annotations()) == {1}
 
 
 def test_torn_tail_rule_matches_spec(tmp_path):

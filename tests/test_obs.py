@@ -158,8 +158,13 @@ def test_jsonl_and_chrome_export(tmp_path):
     w.close()
     lines = [json.loads(s) for s in
              (tmp_path / "t.jsonl").read_text().splitlines()]
-    assert [d["name"] for d in lines] == ["b", "a", "c"]
-    assert lines[1]["attrs"] == {"k": 3}
+    # line 0 is the clock-sync header pairing wall and perf clocks (merge.py
+    # rebases per-process timestamps onto the shared wall clock with it)
+    assert set(lines[0]["clock_sync"]) == {"wall_ns", "perf_ns"}
+    assert lines[0]["pid"] > 0
+    events = lines[1:]
+    assert [d["name"] for d in events] == ["b", "a", "c"]
+    assert events[1]["attrs"] == {"k": 3}
     doc = chrome_trace(tracer=tr)
     names = [e["name"] for e in doc["traceEvents"]]
     assert names == ["a", "b", "c"]  # start-time order, not completion order

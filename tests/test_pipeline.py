@@ -183,14 +183,22 @@ def test_overload_sheds_without_acking(tmp_path):
     svc = _svc(edges, tmp_path, flush_every=8, strategy="fused",
                max_pending=8)
     present = set(svc._view)
+    # submit from a shuffled pool of every absent pair: with only
+    # C(N, 2) = 78 pairs, rejection-sampling a fresh absent pair can spin
+    # forever once a fast device acks enough of the burst to exhaust them
+    pool = [(a, b) for a in range(N) for b in range(a + 1, N)
+            if (a, b) not in present]
+    rng.shuffle(pool)
+    # hold the device "busy" for the whole burst: refuse opportunistic
+    # (non-blocking) landings so the first dispatched generation stays in
+    # flight and the queue genuinely fills — shedding is deterministic
+    # instead of racing a device that may land between submits
+    real_complete = svc._complete
+    svc._complete = lambda wait=True: (real_complete(wait) if wait
+                                       else False)
     shed = 0
     peak = 0
-    for _ in range(80):
-        while True:
-            a, b = (int(x) for x in rng.integers(0, N, size=2))
-            a, b = min(a, b), max(a, b)
-            if a != b and (a, b) not in present:
-                break
+    for a, b in pool[:80]:
         wal_before = svc.store.wal_len
         view_before = set(svc._view)
         ack = svc.submit(1, a, b)
@@ -204,6 +212,7 @@ def test_overload_sheds_without_acking(tmp_path):
             present.add((a, b))
     assert peak <= 8
     assert shed > 0 and svc.overloaded == shed
+    svc._complete = real_complete
     svc.flush()
     assert set(svc.graph.phi_dict()) == present  # acked inserts, no more
 
