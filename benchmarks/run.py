@@ -2,15 +2,16 @@
 
     PYTHONPATH=src python -m benchmarks.run [--full]
 
-Prints ``name,us_per_call,derived,devices,platform,waves,sheds,fsyncs``
-CSV and writes benchmarks/results.csv.  Rows are 3-tuples
-``(name, us, derived)`` — stamped with this process's device count and
-backend — or 4-tuples with an explicit device count (benchmarks that sweep
-device counts in subprocesses), so single- and multi-device numbers never
-silently merge.  A row may additionally end with a telemetry dict
-(``{"waves", "sheds", "fsyncs"}`` deltas pulled from the obs metrics
-registry) filling the last three columns; rows without one — including
-legacy rows merged from an older results.csv — leave them empty.
+Prints ``name,us_per_call,derived,devices,platform,waves,sheds,fsyncs,
+mem_bytes_per_device`` CSV and writes benchmarks/results.csv.  Rows are
+3-tuples ``(name, us, derived)`` — stamped with this process's device count
+and backend — or 4-tuples with an explicit device count (benchmarks that
+sweep device counts in subprocesses), so single- and multi-device numbers
+never silently merge.  A row may additionally end with a telemetry dict
+(``{"waves", "sheds", "fsyncs", "mem_bytes_per_device"}`` — counter deltas
+from the obs metrics registry plus the scale tier's per-device footprint)
+filling the last four columns; rows without one — including legacy rows
+merged from an older results.csv — leave them empty.
 
 ``--check-regressions`` turns the run into a perf-trajectory gate: every
 row this run produced is compared against the committed ``results.csv``
@@ -36,7 +37,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: truss,batch,peel,service,cluster,"
                          "pipeline,affected,kernels,distributed,sharded,"
-                         "roofline,obs,chaos")
+                         "scale,roofline,obs,chaos")
     ap.add_argument("--check-regressions", action="store_true",
                     help="gate this run against the committed results.csv: "
                          "a >10%% per-row slowdown exits 1; the full "
@@ -45,13 +46,14 @@ def main() -> None:
 
     from benchmarks import (affected_set, batch_update, chaos_availability,
                             cluster_scaling, distributed_bench,
-                            ingest_pipeline, kernels_bench, obs_overhead,
-                            peel_engine, roofline, service_throughput,
-                            sharded_peel, truss_maintenance)
+                            ingest_pipeline, kernels_bench, million_edge,
+                            obs_overhead, peel_engine, roofline,
+                            service_throughput, sharded_peel,
+                            truss_maintenance)
 
     selected = set((args.only or
                     "truss,batch,peel,service,cluster,pipeline,affected,"
-                    "kernels,distributed,sharded,roofline,obs,"
+                    "kernels,distributed,sharded,scale,roofline,obs,"
                     "chaos").split(","))
     rows: list = []
     if "truss" in selected:
@@ -84,6 +86,9 @@ def main() -> None:
     if "sharded" in selected:
         print("== sharded peel substrate scaling (ISSUE-5) ==")
         sharded_peel.main(rows, quick=not args.full)
+    if "scale" in selected:
+        print("== million-edge scale tier (ISSUE-10) ==")
+        million_edge.main(rows, quick=not args.full)
     if "roofline" in selected:
         print("== roofline (from dry-run artifacts) ==")
         roofline.main(rows)
@@ -113,28 +118,30 @@ def main() -> None:
                         pass
     # A partial run (--only) merges into the existing csv by row name so the
     # perf trajectory keeps every section's latest numbers.  Legacy rows
-    # (3- or 5-column eras) are padded so the file stays uniform under the
-    # 8-column header.
+    # (3-, 5- or 8-column eras) are padded so the file stays uniform under
+    # the 9-column header.
     merged: dict[str, str] = {}
     if args.only and os.path.exists(out):
         with open(out) as f:
             for line in f.read().splitlines()[1:]:
                 if line.strip():
-                    pad = 7 - line.count(",")
+                    pad = 8 - line.count(",")
                     if pad > 0:
                         line += "," * pad
                     merged[line.split(",", 1)[0]] = line
     for row in rows:
         name, us, derived = row[:3]
         rest = list(row[3:])
-        # an optional trailing telemetry dict fills the waves/sheds/fsyncs
-        # columns; whatever remains (at most one int) is the device count
+        # an optional trailing telemetry dict fills the waves/sheds/fsyncs/
+        # mem columns; whatever remains (at most one int) is the device count
         tel = rest.pop() if rest and isinstance(rest[-1], dict) else {}
         ndev = rest[0] if rest else ndev_default
         merged[name] = (f"{name},{us:.1f},{derived},{ndev},{platform},"
                         f"{tel.get('waves', '')},{tel.get('sheds', '')},"
-                        f"{tel.get('fsyncs', '')}")
-    header = "name,us_per_call,derived,devices,platform,waves,sheds,fsyncs"
+                        f"{tel.get('fsyncs', '')},"
+                        f"{tel.get('mem_bytes_per_device', '')}")
+    header = ("name,us_per_call,derived,devices,platform,waves,sheds,fsyncs,"
+              "mem_bytes_per_device")
     print("\n" + header)
     lines = [header]
     for line in merged.values():

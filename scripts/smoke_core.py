@@ -3,7 +3,9 @@ end-to-end service smoke (ingest, query, snapshot, restore, re-answer), a
 cluster smoke (primary + 2 WAL-tailing replicas + consistency-aware router
 over one store dir: write, read under every policy, promote), a sharded
 smoke (4 emulated devices in a subprocess: decompose + fused batch bitwise
-vs the single-device engine and the oracle), and an obs smoke (serve_truss
+vs the single-device engine and the oracle), a scale smoke (4 emulated
+devices: ~10^5-edge node-partitioned decompose bitwise vs the replicated
+single-device engine), and an obs smoke (serve_truss
 subprocess with --metrics-port/--trace-out: scrape /metrics mid-run, parse
 it, assert the serving metric families; the exit trace must load as Chrome
 JSON), and a chaos smoke (sticky fsync EIO mid-run: writes shed, committed
@@ -229,6 +231,53 @@ print("ok")
           f"bitwise vs single-device and oracle)")
 
 
+def smoke_scale(devices=4, seed=7):
+    """Node-partitioned bitmap at ~10^5 edges: re-exec on ``devices``
+    emulated host devices, decompose with ``partition="nodes"`` and check
+    phi + peel stats bitwise against the replicated single-device engine,
+    plus the per-device slab footprint (1/S of the full bitmap)."""
+    code = f"""
+import sys
+sys.path.insert(0, "src")
+import numpy as np
+from repro.core import GraphSpec, from_edge_list
+from repro.core.graph import (build_bitmap_partitioned, pad_state,
+                              shard_state, with_mesh)
+from repro.core.peel import peel
+from repro.launch.mesh import make_shard_mesh
+from repro.data.synthetic import powerlaw_graph
+
+n, m, cap = 8192, 16, 512
+edges = powerlaw_graph(n, m, seed={seed}, max_degree=cap)
+assert len(edges) > 100_000, len(edges)
+spec0 = GraphSpec(n_nodes=n, d_max=cap, e_cap=len(edges))
+st0 = from_edge_list(spec0, np.asarray(edges))
+phi1, ps1 = peel(spec0, st0, st0.active, method="bitmap", engine="delta")
+
+mesh = make_shard_mesh({devices})
+spec = with_mesh(spec0, mesh, partition="nodes")
+st = shard_state(spec, pad_state(spec0, st0, spec), mesh)
+phi2, ps2 = peel(spec, st, st.active, method="bitmap", engine="delta",
+                 mesh=mesh)
+assert np.array_equal(np.asarray(phi2)[:spec0.e_cap], np.asarray(phi1))
+assert all(int(a) == int(b) for a, b in zip(ps1, ps2))
+
+bm = build_bitmap_partitioned(spec, st, st.active, mesh)
+for sh in bm.addressable_shards:
+    assert sh.data.shape == (spec.n_nodes, spec.word_block)
+    assert sh.data.nbytes == spec.bitmap_bytes_per_device
+print("ok %d edges %d waves" % (len(edges), int(ps2.waves)))
+"""
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    print(f"scale smoke ok ({devices} devices, ~10^5-edge partitioned "
+          f"decompose bitwise vs replicated single-device; "
+          f"{out.stdout.strip().splitlines()[-1]})")
+
+
 def smoke_obs(ticks=4, seed=0):
     """Telemetry plane, end to end against a real subprocess: launch
     ``serve_truss`` with ``--metrics-port 0 --trace-out --pipeline``, scrape
@@ -432,8 +481,8 @@ def smoke_core():
 
 SECTIONS = {"core": smoke_core, "service": smoke_service,
             "cluster": smoke_cluster, "sharded": smoke_sharded,
-            "obs": smoke_obs, "operability": smoke_operability,
-            "chaos": smoke_chaos}
+            "scale": smoke_scale, "obs": smoke_obs,
+            "operability": smoke_operability, "chaos": smoke_chaos}
 
 if __name__ == "__main__":
     picked = sys.argv[1:] or list(SECTIONS)

@@ -64,18 +64,20 @@ class Replica:
     def __init__(self, root: str, replica_id: str = "replica-0", *,
                  flush_every: int = 16, strategy: str = "auto",
                  indexed: bool = True, support_method: str = "sorted",
-                 mesh=None, heartbeat_s: float | None = None,
+                 mesh=None, partition: str = "replicated",
+                 heartbeat_s: float | None = None,
                  clock=time.monotonic):
         self.store = TrussStore(root, readonly=True)
         self.replica_id = replica_id
         # strategy/support_method must match the primary's for bitwise
         # equality (they select the maintenance path apply_batch runs);
-        # mesh need NOT match — the sharded peel is bitwise-equal at any
-        # device count, so a replica may tail a sharded primary from a
-        # single device and vice versa
+        # mesh — and the bitmap partition layout over it — need NOT match:
+        # the sharded peel is bitwise-equal at any device count and either
+        # partition, so a replica may tail a node-partitioned sharded
+        # primary from a single replicated device and vice versa
         self._kw = dict(flush_every=flush_every, strategy=strategy,
                         indexed=indexed, support_method=support_method,
-                        mesh=mesh)
+                        mesh=mesh, partition=partition)
         # heartbeat_s: refresh the lease file even on a quiet WAL so the
         # router's stale-lease eviction can tell "caught up and idle" from
         # "wedged"; None keeps the old frontier-change-only writes

@@ -27,15 +27,24 @@ import jax.numpy as jnp
 
 from ..obs import metrics as obs_metrics, trace as obs_trace
 from . import batch, decomposition, maintenance
-from .graph import (GraphSpec, GraphState, build_bitmap, from_edge_list,
-                    lookup_edge, pad_state, shard_state, update_bitmap,
-                    with_mesh)
+from .graph import (GraphSpec, GraphState, build_bitmap,
+                    build_bitmap_partitioned, from_edge_list, lookup_edge,
+                    pad_state, shard_state, update_bitmap,
+                    update_bitmap_partitioned, with_mesh)
 from .index import TrussIndex
 from .peel import EMPTY_STATS
 
 _PROGRESSIVE_N = obs_metrics.counter(
     "truss_progressive_updates_total",
     "single-edge Algorithm-1/2 maintenance operations")
+_BITMAP_BYTES = obs_metrics.gauge(
+    "truss_bitmap_bytes",
+    "resident adjacency-bitmap bytes per device under the spec's bitmap "
+    "partition (O(N*W) replicated, O(N*W/S) nodes)")
+_STATE_BYTES = obs_metrics.gauge(
+    "truss_state_bytes_per_device",
+    "resident GraphState bytes per device: row-blocked edge arrays + "
+    "replicated node tables + the per-device bitmap slab")
 
 
 class DynamicGraph:
@@ -45,17 +54,22 @@ class DynamicGraph:
     def __init__(self, n_nodes: int, edges=(), d_max: int | None = None,
                  e_cap: int | None = None, support_method: str = "sorted",
                  tracked_ks: tuple[int, ...] = (), mesh=None,
-                 shard_axis: str = "shard"):
+                 shard_axis: str = "shard", partition: str = "replicated"):
         edges = np.asarray(list(edges), dtype=np.int64).reshape(-1, 2)
         deg = np.bincount(edges.reshape(-1), minlength=n_nodes) if edges.size else np.zeros(n_nodes)
         d_max = int(d_max or max(8, int(deg.max(initial=0)) * 2))
         e_cap = int(e_cap or max(16, len(edges) * 2))
+        if partition != "replicated" and mesh is None:
+            raise ValueError(
+                f"partition={partition!r} needs a mesh (the bitmap slabs "
+                "live one per device; pass mesh=... or keep 'replicated')")
         self.mesh = mesh
         self.spec = GraphSpec(n_nodes=n_nodes, d_max=d_max, e_cap=e_cap)
         if mesh is not None:
             # round e_cap up so edge arrays split into uniform row blocks;
             # every peel this wrapper launches then shards transparently
-            self.spec = with_mesh(self.spec, mesh, shard_axis)
+            self.spec = with_mesh(self.spec, mesh, shard_axis,
+                                  partition=partition)
         self.state = from_edge_list(self.spec, edges) if len(edges) else None
         if self.state is None:
             from .graph import empty_state
@@ -66,6 +80,7 @@ class DynamicGraph:
             self.state = shard_state(self.spec, self.state, mesh)
         self.support_method = support_method
         self._bitmap = None
+        self._set_memory_gauges()
         phi, stats = decomposition.decompose_with_stats(
             self.spec, self.state, support_method, bitmap=self._bitmap_cache(),
             mesh=self.mesh)
@@ -82,21 +97,29 @@ class DynamicGraph:
     def from_state(cls, spec: GraphSpec, state: GraphState,
                    support_method: str = "sorted",
                    tracked_ks: tuple[int, ...] = (),
-                   mesh=None, shard_axis: str = "shard") -> "DynamicGraph":
+                   mesh=None, shard_axis: str = "shard",
+                   partition: str = "replicated") -> "DynamicGraph":
         """Rebuild a wrapper around already-maintained arrays (checkpoint
         restore): phi is trusted as-is, no re-decomposition.  ``mesh``
         re-shards the restored state onto the mesh (padding the edge axis
-        if the stored capacity doesn't split into uniform row blocks)."""
+        if the stored capacity doesn't split into uniform row blocks);
+        ``partition`` selects the bitmap layout exactly as in ``__init__``
+        (snapshots never store the bitmap, so a restore may change it)."""
+        if partition != "replicated" and mesh is None:
+            raise ValueError(
+                f"partition={partition!r} needs a mesh (the bitmap slabs "
+                "live one per device; pass mesh=... or keep 'replicated')")
         g = cls.__new__(cls)
         g.mesh = mesh
         g.spec = spec
         g.state = GraphState(*(jnp.asarray(x) for x in state))
         if mesh is not None:
-            g.spec = with_mesh(spec, mesh, shard_axis)
+            g.spec = with_mesh(spec, mesh, shard_axis, partition=partition)
             g.state = shard_state(g.spec, pad_state(spec, g.state, g.spec),
                                   mesh)
         g.support_method = support_method
         g._bitmap = None
+        g._set_memory_gauges()
         g.last_peel_stats = EMPTY_STATS  # phi trusted as-is: no peel ran
         g.index = TrussIndex(g.spec, tracked_ks)
         act = np.asarray(g.state.active)
@@ -105,18 +128,39 @@ class DynamicGraph:
         return g
 
     # -- bitmap cache --------------------------------------------------------
+    def _partitioned(self) -> bool:
+        """Whether the cached bitmap lives word-sharded (one slab per
+        device) rather than replicated."""
+        return self.spec.partition == "nodes" and self.mesh is not None
+
+    def _set_memory_gauges(self):
+        """Publish the spec's per-device memory accounting — the same
+        numbers BENCH_scale.json's memory curve reads, so the bench and
+        operator dashboards can never disagree."""
+        _BITMAP_BYTES.set(self.spec.bitmap_bytes_per_device)
+        _STATE_BYTES.set(self.spec.state_bytes_per_device)
+
     def _bitmap_cache(self):
         """Adjacency bitmap of the active edge set (bitmap method only),
-        built once and maintained incrementally by every update path."""
+        built once and maintained incrementally by every update path.
+        Under ``partition="nodes"`` it is built owner-local and placed
+        word-sharded — O(N·W/S) resident per device."""
         if self.support_method != "bitmap":
             return None
         if self._bitmap is None:
-            self._bitmap = build_bitmap(self.spec, self.state, self.state.active)
+            if self._partitioned():
+                self._bitmap = build_bitmap_partitioned(
+                    self.spec, self.state, self.state.active, self.mesh)
+            else:
+                self._bitmap = build_bitmap(self.spec, self.state,
+                                            self.state.active)
         return self._bitmap
 
     def _bitmap_apply(self, dels, inss):
         """Fold structural edge changes into the cached bitmap (O(batch)
-        scatter; no-op when the cache is cold or the method is sorted)."""
+        scatter; no-op when the cache is cold or the method is sorted).
+        Partitioned caches update owner-local — each device scatters only
+        the bits landing in its word slab."""
         if self._bitmap is None:
             return
 
@@ -124,9 +168,13 @@ class DynamicGraph:
             if not len(pairs):
                 return bm
             arr = np.asarray(pairs, np.int32).reshape(-1, 2)
-            return update_bitmap(self.spec, bm, jnp.asarray(arr[:, 0]),
-                                 jnp.asarray(arr[:, 1]),
-                                 jnp.ones((len(arr),), bool),
+            u, v = jnp.asarray(arr[:, 0]), jnp.asarray(arr[:, 1])
+            valid = jnp.ones((len(arr),), bool)
+            if self._partitioned():
+                return update_bitmap_partitioned(self.spec, bm, u, v, valid,
+                                                 set_bits=set_bits,
+                                                 mesh=self.mesh)
+            return update_bitmap(self.spec, bm, u, v, valid,
                                  set_bits=set_bits)
 
         self._bitmap = upd(upd(self._bitmap, dels, False), inss, True)
@@ -157,6 +205,7 @@ class DynamicGraph:
             d_max=max(self.spec.d_max * 2, int(deg.max(initial=0)) + 4, min_d + 4),
             e_cap=-(-new_e // s) * s,  # keep the shard row blocks uniform
             n_shards=s, shard_axis=self.spec.shard_axis,
+            partition=self.spec.partition,
         )
         phi_old = self.phi_dict()
         self.spec = new_spec
@@ -172,6 +221,7 @@ class DynamicGraph:
         if self.mesh is not None:
             self.state = shard_state(self.spec, self.state, self.mesh)
         self._bitmap = None  # shape depends only on n_nodes, but rebuild anyway
+        self._set_memory_gauges()
         self.index = TrussIndex(new_spec, self.index.tracked)
         self.index.invalidate_all()
 
@@ -358,7 +408,9 @@ class DynamicGraph:
             self.spec = GraphSpec(self.spec.n_nodes,
                                   max(self.spec.d_max, int(deg.max(initial=0)) + 4),
                                   -(-max(self.spec.e_cap, len(el) + 16) // s) * s,
-                                  n_shards=s, shard_axis=self.spec.shard_axis)
+                                  n_shards=s, shard_axis=self.spec.shard_axis,
+                                  partition=self.spec.partition)
+            self._set_memory_gauges()
         self.state = from_edge_list(self.spec, np.asarray(el).reshape(-1, 2))
         if self.mesh is not None:
             self.state = shard_state(self.spec, self.state, self.mesh)

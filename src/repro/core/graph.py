@@ -35,11 +35,30 @@ class GraphSpec:
     of the edge axis: every edge-indexed array (``edges``, ``active``,
     ``phi``) is row-blocked into ``n_shards`` contiguous blocks of
     ``block`` slots, block *s* owned by mesh position *s* along
-    ``shard_axis``.  Node-indexed arrays (``nbr``/``eid``/``deg``, the
-    adjacency bitmap) stay replicated.  ``n_shards == 1`` (the default) is
-    the single-device layout; the spec stays hashable and the devices
-    themselves never enter it — the ``Mesh`` is supplied at call time and
-    validated against this geometry.
+    ``shard_axis``.  Node-indexed arrays (``nbr``/``eid``/``deg``) stay
+    replicated.  ``n_shards == 1`` (the default) is the single-device
+    layout; the spec stays hashable and the devices themselves never enter
+    it — the ``Mesh`` is supplied at call time and validated against this
+    geometry.
+
+    ``partition`` declares where the **adjacency bitmap** lives:
+
+    * ``"replicated"`` (default) — every device holds the full
+      ``uint32[N, W]`` bitmap; bitwise-identical to the pre-partition
+      engine at any device count, but per-device bitmap memory is O(N·W)
+      regardless of shard count, so devices buy wave-time and zero
+      capacity.
+    * ``"nodes"`` — the bitmap's *word axis* (its columns index neighbor
+      nodes: word ``w`` of row ``u`` holds membership bits for nodes
+      ``32w..32w+31``) is blocked into ``n_shards`` contiguous slabs,
+      device *s* holding only ``bm[:, s·Wb:(s+1)·Wb]`` — O(N·W/S) per
+      device.  Support decomposes exactly across slabs
+      (``sup(e) = Σ_s popcount(rows ∩ slab_s)``), so the partitioned peel
+      engine exchanges one psum of int32 partial supports per wave and
+      every bit keeps exactly one owner (construction and incremental
+      clearing stay collective-free).  ``n_words`` rounds up to a multiple
+      of ``n_shards`` so slabs are uniform (padding words are zero and
+      contribute nothing to any popcount).
     """
 
     n_nodes: int
@@ -47,17 +66,49 @@ class GraphSpec:
     e_cap: int
     n_shards: int = 1
     shard_axis: str = "shard"
+    partition: str = "replicated"
 
     def __post_init__(self):
         if self.e_cap % self.n_shards:
             raise ValueError(
                 f"e_cap {self.e_cap} must divide into n_shards "
                 f"{self.n_shards} row blocks (see with_mesh)")
+        if self.partition not in ("replicated", "nodes"):
+            raise ValueError(
+                f"unknown bitmap partition {self.partition!r} "
+                "(expected 'replicated' or 'nodes')")
 
     @property
     def n_words(self) -> int:
-        """uint32 words per adjacency-bitmap row."""
-        return (self.n_nodes + 31) // 32
+        """uint32 words per adjacency-bitmap row (padded to uniform
+        per-shard word slabs under ``partition='nodes'``)."""
+        w = (self.n_nodes + 31) // 32
+        if self.partition == "nodes":
+            w = -(-w // self.n_shards) * self.n_shards
+        return w
+
+    @property
+    def word_block(self) -> int:
+        """Words of one device's bitmap slab (``n_words`` when replicated)."""
+        if self.partition == "nodes":
+            return self.n_words // self.n_shards
+        return self.n_words
+
+    @property
+    def bitmap_bytes_per_device(self) -> int:
+        """Resident adjacency-bitmap bytes per device — THE number the
+        partition exists to shrink (O(N·W) replicated, O(N·W/S) nodes)."""
+        return self.n_nodes * self.word_block * 4
+
+    @property
+    def state_bytes_per_device(self) -> int:
+        """Resident ``GraphState`` bytes per device under this geometry:
+        edge-axis arrays row-blocked (edges/active/phi), node tables
+        replicated (nbr/eid int32 + deg int32), bitmap per ``partition``."""
+        e_blk = self.e_cap // self.n_shards
+        edge_bytes = e_blk * (2 * 4 + 1 + 4)          # edges, active, phi
+        node_bytes = self.n_nodes * (2 * self.d_max * 4 + 4)  # nbr, eid, deg
+        return edge_bytes + node_bytes + self.bitmap_bytes_per_device
 
 
 class GraphState(NamedTuple):
@@ -146,12 +197,17 @@ def from_edge_list(spec: GraphSpec, edge_list: np.ndarray) -> GraphState:
 # node-indexed arrays replicated; mesh=None consumers ignore all of this.
 # ---------------------------------------------------------------------------
 
-def with_mesh(spec: GraphSpec, mesh, axis: str = "shard") -> GraphSpec:
+def with_mesh(spec: GraphSpec, mesh, axis: str = "shard",
+              partition: str | None = None) -> GraphSpec:
     """Spec with the partition geometry of ``mesh[axis]``: ``e_cap`` rounded
-    up to a multiple of the axis size so the edge row blocks are uniform."""
+    up to a multiple of the axis size so the edge row blocks are uniform.
+    ``partition`` optionally switches the bitmap layout (``"replicated"`` /
+    ``"nodes"``); ``None`` keeps the spec's current one."""
     s = int(mesh.shape[axis])
     e_cap = -(-spec.e_cap // s) * s
-    return dataclasses.replace(spec, e_cap=e_cap, n_shards=s, shard_axis=axis)
+    return dataclasses.replace(
+        spec, e_cap=e_cap, n_shards=s, shard_axis=axis,
+        partition=spec.partition if partition is None else partition)
 
 
 def pad_state(old_spec: GraphSpec, st: GraphState, spec: GraphSpec) -> GraphState:
@@ -409,7 +465,9 @@ def support_all(spec: GraphSpec, st: GraphState, alive: jax.Array) -> jax.Array:
 # Adjacency bitmaps — TPU-native intersection via AND + popcount (DESIGN §2).
 # ---------------------------------------------------------------------------
 
-def partial_bitmap(spec: GraphSpec, edges: jax.Array, valid: jax.Array) -> jax.Array:
+def partial_bitmap(spec: GraphSpec, edges: jax.Array, valid: jax.Array,
+                   word_offset: jax.Array | int = 0,
+                   word_count: int | None = None) -> jax.Array:
     """uint32[N, W] bitmap contribution of an edge subset ([B, 2], masked).
 
     Each valid edge contributes one distinct bit per direction, so
@@ -420,14 +478,27 @@ def partial_bitmap(spec: GraphSpec, edges: jax.Array, valid: jax.Array) -> jax.A
     partial bitmap clears exactly that subset's bits with no borrow.  This
     is the one bitmap-construction primitive behind ``build_bitmap`` and
     the sharded peel engine's per-wave delta exchange.
+
+    ``(word_offset, word_count)`` select one **word slab** of the output —
+    the ``partition="nodes"`` layout where a device owns columns
+    ``[word_offset, word_offset + word_count)`` only: the result is
+    ``uint32[N, word_count]`` holding exactly the full bitmap's slice (bits
+    whose destination word falls outside the slab are dropped — they belong
+    to another owner).  ``word_count=None`` is the full-width build,
+    bit-for-bit the pre-partition behavior.
     """
     u = jnp.where(valid, edges[:, 0], spec.n_nodes)  # OOB rows are dropped
     v = jnp.where(valid, edges[:, 1], spec.n_nodes)
-    bm = jnp.zeros((spec.n_nodes, spec.n_words), dtype=jnp.uint32)
+    w = spec.n_words if word_count is None else word_count
+    bm = jnp.zeros((spec.n_nodes, w), dtype=jnp.uint32)
     one = jnp.uint32(1)
 
     def scatter_dir(bm, src, dst):
         word = (dst // 32).astype(jnp.int32)
+        if word_count is not None:
+            # out-of-slab words map past the slab edge -> mode="drop"
+            word = jnp.where((word >= word_offset) & (word < word_offset + w),
+                             word - word_offset, w)
         bit = (dst % 32).astype(jnp.uint32)
         val = jnp.left_shift(one, bit)
         return bm.at[src, word].add(val, mode="drop")
@@ -443,7 +514,9 @@ def build_bitmap(spec: GraphSpec, st: GraphState, alive: jax.Array) -> jax.Array
 
 
 def update_bitmap(spec: GraphSpec, bm: jax.Array, u: jax.Array, v: jax.Array,
-                  valid: jax.Array, *, set_bits: bool) -> jax.Array:
+                  valid: jax.Array, *, set_bits: bool,
+                  word_offset: jax.Array | int = 0,
+                  word_count: int | None = None) -> jax.Array:
     """Incrementally set (insert) or clear (delete/peel) per-edge bits.
 
     O(B) scatter instead of the O(E) rebuild of ``build_bitmap``.  Clearing
@@ -452,13 +525,26 @@ def update_bitmap(spec: GraphSpec, bm: jax.Array, u: jax.Array, v: jax.Array,
     the bit value clears it with no borrow (the dual of build_bitmap's
     scatter-add-as-scatter-or).  Caller guarantees set bits are absent and
     cleared bits are present.
+
+    ``(word_offset, word_count)`` make the update **owner-local** for a
+    ``partition="nodes"`` word slab: ``bm`` is the device's
+    ``uint32[N, word_count]`` slab and only the bits whose destination word
+    falls inside it are applied — every bit has exactly one owner, so the
+    per-slab updates compose to exactly the full-bitmap update with no
+    collective (the same disjoint-bits argument as ``partial_bitmap``).
     """
     uu = jnp.where(valid, u, spec.n_nodes).astype(jnp.int32)  # OOB rows drop
     vv = jnp.where(valid, v, spec.n_nodes).astype(jnp.int32)
     one = jnp.uint32(1)
+    w = spec.n_words if word_count is None else word_count
 
     def upd(bm, src, dst):
-        word = jnp.minimum(dst // 32, spec.n_words - 1).astype(jnp.int32)
+        if word_count is None:
+            word = jnp.minimum(dst // 32, spec.n_words - 1).astype(jnp.int32)
+        else:
+            word = (dst // 32).astype(jnp.int32)
+            word = jnp.where((word >= word_offset) & (word < word_offset + w),
+                             word - word_offset, w)  # out-of-slab -> drop
         bit = (dst % 32).astype(jnp.uint32)
         val = jnp.left_shift(one, bit)
         val = val if set_bits else jnp.uint32(0) - val
@@ -467,6 +553,62 @@ def update_bitmap(spec: GraphSpec, bm: jax.Array, u: jax.Array, v: jax.Array,
     bm = upd(bm, uu, vv)
     bm = upd(bm, vv, uu)
     return bm
+
+
+# ---------------------------------------------------------------------------
+# Node-partitioned bitmap constructors (partition="nodes") — each device owns
+# one word slab of the [N, W] bitmap; construction and incremental update are
+# owner-local (no collective), placement is P(None, shard_axis).
+# ---------------------------------------------------------------------------
+
+def bitmap_sharding(spec: GraphSpec, mesh):
+    """``NamedSharding`` of the adjacency bitmap under this spec's
+    ``partition``: word-axis slabs for ``"nodes"``, replicated otherwise."""
+    from jax.sharding import NamedSharding, PartitionSpec as P  # lazy: host paths
+    if spec.partition == "nodes":
+        return NamedSharding(mesh, P(None, spec.shard_axis))
+    return NamedSharding(mesh, P())
+
+
+def build_bitmap_partitioned(spec: GraphSpec, st: GraphState,
+                             alive: jax.Array, mesh) -> jax.Array:
+    """Word-sharded ``uint32[N, W]`` adjacency bitmap of the alive subgraph:
+    every device scatters the full edge table (replicated in) into its own
+    slab and drops out-of-slab bits — value-equal to ``build_bitmap``, laid
+    out ``P(None, shard_axis)`` with O(N·W/S) resident per device."""
+    from jax.sharding import PartitionSpec as P
+    from ..compat import shard_map
+
+    ax, wb = spec.shard_axis, spec.word_block
+
+    def local_fn(edges, valid):
+        off = jax.lax.axis_index(ax).astype(jnp.int32) * wb
+        return partial_bitmap(spec, edges, valid,
+                              word_offset=off, word_count=wb)
+
+    return shard_map(local_fn, mesh=mesh, in_specs=(P(), P()),
+                     out_specs=P(None, ax), check=False)(st.edges, alive)
+
+
+def update_bitmap_partitioned(spec: GraphSpec, bm: jax.Array, u: jax.Array,
+                              v: jax.Array, valid: jax.Array, *,
+                              set_bits: bool, mesh) -> jax.Array:
+    """Owner-local incremental update of a word-sharded bitmap: each device
+    applies only the bits landing in its slab, so the per-slab updates
+    compose to exactly the ``update_bitmap`` result with zero exchange."""
+    from jax.sharding import PartitionSpec as P
+    from ..compat import shard_map
+
+    ax, wb = spec.shard_axis, spec.word_block
+
+    def local_fn(bm, u, v, valid):
+        off = jax.lax.axis_index(ax).astype(jnp.int32) * wb
+        return update_bitmap(spec, bm, u, v, valid, set_bits=set_bits,
+                             word_offset=off, word_count=wb)
+
+    return shard_map(local_fn, mesh=mesh,
+                     in_specs=(P(None, ax), P(), P(), P()),
+                     out_specs=P(None, ax), check=False)(bm, u, v, valid)
 
 
 def support_all_bitmap(spec: GraphSpec, st: GraphState, alive: jax.Array,

@@ -61,6 +61,26 @@ bitmaps of the full qualifying set.  All reductions are integer min/sum of
 the same values the single-device loop computes, so the sharded engine is
 **bitwise-equal** to ``mesh=None`` at every device count — enforced by
 ``tests/test_sharded.py``.
+
+**Node-partitioned bitmap** (``spec.partition == "nodes"``).  The layouts
+above replicate the [N, W] bitmap on every device; at million-edge scale
+that allocation is the ceiling.  ``_partitioned_bitmap_peel`` instead
+gives device ``s`` ownership of the word-column slab
+``bm[:, s·W/S:(s+1)·W/S]`` and inverts the sharding: the *edge-indexed*
+wave state is replicated inside the loop while the *bitmap* is split.
+Per wave every shard computes the partial support of every peel edge
+against its slab (popcounts over disjoint word slabs sum exactly) in
+``gather_chunk``-row batches, and one integer ``psum`` of ``int32[E]``
+partials recovers exact support — zero bitmap bytes on the wire.  The
+kill/retire/phi/k arithmetic then runs identically on every shard, so the
+loop condition needs no further collective; builds and incremental
+clears scatter owner-locally (out-of-slab bits drop — every bit has one
+owner).  Both engines (``delta``: incremental slab clearing;
+``recompute``: per-wave slab rebuild) mirror their replicated twins'
+arithmetic exactly, and ``phi`` lands sharded ``P(shard_axis)`` via a
+per-shard block slice.  Bitwise-equal to ``partition="replicated"`` at
+every device count — enforced end-to-end by ``tests/test_scale.py``;
+the memory curve is ``benchmarks/million_edge.py``.
 """
 from __future__ import annotations
 
@@ -615,6 +635,18 @@ def sharded_peel(spec: GraphSpec, st: GraphState, peel_mask: jax.Array,
             f"mesh axis {spec.shard_axis!r} has "
             f"{int(mesh.shape[spec.shard_axis])} devices but spec declares "
             f"{spec.n_shards} shards (build the spec with graph.with_mesh)")
+    if spec.partition == "nodes" and method == "bitmap":
+        # node-partitioned bitmap: each device owns one word slab, supports
+        # psum from per-slab partials (see _partitioned_bitmap_peel)
+        if engine not in ("delta", "recompute"):
+            raise ValueError(f"unknown engine {engine!r}")
+        has_bitmap = bitmap is not None
+        if bitmap is None:
+            bitmap = jnp.zeros((1, spec.n_shards), jnp.uint32)  # placeholder
+        phi, waves, kills, deltas, frontier = _partitioned_bitmap_peel(
+            spec, st.edges, st.active, st.phi, peel_mask, bitmap,
+            mesh=mesh, has_bitmap=has_bitmap, engine=engine)
+        return phi, PeelStats(waves, kills, deltas, frontier)
     if engine == "delta":
         if method != "bitmap":
             raise ValueError(
@@ -701,6 +733,151 @@ def _sharded_delta_bitmap(spec: GraphSpec, edges, active, phi0, peel_mask,
 
     mapped = shard_map(local_fn, mesh=mesh,
                        in_specs=(P(ax, None), P(ax), P(ax), P(ax), P()),
+                       out_specs=(P(ax), P(), P(), P(), P()),
+                       check=False)
+    return mapped(edges, active, phi0, peel_mask, bitmap)
+
+
+#: Row batch of the partitioned engine's per-wave support gathers: bounds
+#: the [chunk, W/S] gather transient so million-edge bitmaps never
+#: materialize an [E, W] intermediate (see kernels.ops.bitmap_support_gathered).
+_GATHER_CHUNK = 8192
+
+
+@partial(jax.jit, static_argnames=("spec", "mesh", "has_bitmap", "engine",
+                                   "gather_chunk"))
+def _partitioned_bitmap_peel(spec: GraphSpec, edges, active, phi0, peel_mask,
+                             bitmap, *, mesh, has_bitmap, engine,
+                             gather_chunk: int = _GATHER_CHUNK):
+    """Node-partitioned twin of ``_peel_bitmap``/``recompute_peel``
+    (``spec.partition == "nodes"``): device *s* holds only the bitmap word
+    slab ``bm[:, s·Wb:(s+1)·Wb]`` — O(N·W/S) resident instead of the
+    replicated engines' O(N·W) — and the edge-axis state (endpoints, masks,
+    phi, k) is replicated inside the loop, so every device runs the exact
+    single-device wave arithmetic.
+
+    The per-wave exchange is **one psum of int32 partial supports**:
+    ``sup(e) = popcount(bm[u] & bm[v]) = Σ_s popcount(slab_s[u] & slab_s[v])``
+    decomposes exactly over word slabs (integer popcounts of disjoint
+    columns), so the psum'd support is bitwise the replicated engines'
+    support — no bitmap byte ever crosses the wire.  Kill/retire/phi/k then
+    evaluate replicated on the psum'd value (no second collective; the loop
+    condition is replicated too), and bit-clearing (delta) or slab rebuild
+    (recompute) is owner-local — every bit has exactly one owner, the same
+    disjoint-bits argument as ``partial_bitmap``.  phi AND PeelStats are
+    therefore bitwise-equal to ``partition="replicated"`` at any device
+    count (``tests/test_scale.py``).
+
+    Support rows are gathered in ``gather_chunk``-row batches so the
+    resident transient is [chunk, W/S], never [E, W] — the property that
+    lets the scale tier run ≥1M-edge graphs per device.
+    """
+    from jax.sharding import PartitionSpec as P
+    from ..compat import shard_map
+    from ..kernels import ops as kernel_ops  # kernels never import core
+
+    e_cap, n, ax = spec.e_cap, spec.n_nodes, spec.shard_axis
+    wb = spec.word_block
+    blk = e_cap // spec.n_shards
+
+    def local_fn(edges, active, phi0, peelm, bitmap):
+        off = jax.lax.axis_index(ax).astype(jnp.int32) * wb
+        peelm = peelm & active
+        frozen = active & ~peelm
+        fphi = phi0
+        alive0 = peelm | (frozen & (fphi >= 3))
+        eu = jnp.minimum(edges[:, 0], n - 1)
+        ev = jnp.minimum(edges[:, 1], n - 1)
+
+        def psum_sup(slab):
+            # THE one collective per wave: partial popcounts of this
+            # device's word slab, summed into the exact full support
+            part = kernel_ops.bitmap_support_gathered(slab, eu, ev,
+                                                      chunk=gather_chunk)
+            return jax.lax.psum(part, ax)
+
+        if engine == "delta":
+            if has_bitmap:
+                # the provided (word-sharded) bitmap covers st.active:
+                # drop the bits of edges outside the initial qualifying
+                # set — owner-local, like every slab update
+                bm0 = update_bitmap(spec, bitmap, edges[:, 0], edges[:, 1],
+                                    active & ~alive0, set_bits=False,
+                                    word_offset=off, word_count=wb)
+            else:
+                bm0 = partial_bitmap(spec, edges, alive0,
+                                     word_offset=off, word_count=wb)
+
+            def cond(c: _Carry):
+                return jnp.any(c.alive & peelm) & (c.waves < 8 * e_cap)
+
+            def body(c: _Carry):
+                # the psum'd support is exactly the replicated engine's
+                # peel_wave output; threshold AFTER the sum (a slab's
+                # partial support must never meet k)
+                sup = jnp.where(c.alive & peelm, psum_sup(c.bm), 0)
+                kill = c.alive & peelm & (sup < c.k - 2)
+                retire = c.alive & frozen & (fphi < c.k)
+                dead = kill | retire
+                any_dead = jnp.any(dead)
+
+                phi = jnp.where(kill, c.k - 1, c.phi)
+                alive = c.alive & ~dead
+                bm = update_bitmap(spec, c.bm, edges[:, 0], edges[:, 1],
+                                   dead, set_bits=False,
+                                   word_offset=off, word_count=wb)
+
+                min_sup = jnp.min(jnp.where(alive & peelm, sup, _INF))
+                min_frz = jnp.min(jnp.where(alive & frozen, fphi, _INF))
+                k_next = jnp.maximum(c.k + 1,
+                                     jnp.minimum(min_sup + 3, min_frz + 1))
+                k = jnp.where(any_dead, c.k, k_next)
+                return _Carry(alive, phi, sup, bm, k, c.waves + 1,
+                              c.kills + jnp.sum(kill, dtype=jnp.int32),
+                              c.deltas + 2 * jnp.sum(dead, dtype=jnp.int32))
+
+            init = _Carry(alive0, phi0, jnp.zeros_like(phi0), bm0,
+                          jnp.int32(3), jnp.int32(0), jnp.int32(0),
+                          jnp.int32(0))
+            out = jax.lax.while_loop(cond, body, init)
+            phi, waves = out.phi, out.waves
+            kills, deltas = out.kills, out.deltas
+        else:  # recompute: rebuild this device's slab from qual each wave
+            def cond(carry):
+                alive, phi, k, waves, kills = carry
+                return jnp.any(alive) & (waves < 8 * e_cap)
+
+            def body(carry):
+                alive, phi, k, waves, kills = carry
+                qual = alive | (frozen & (fphi >= k))
+                slab = partial_bitmap(spec, edges, qual,
+                                      word_offset=off, word_count=wb)
+                sup = jnp.where(qual, psum_sup(slab), 0)
+                kill = alive & (sup < k - 2)
+                any_kill = jnp.any(kill)
+                phi = jnp.where(kill, k - 1, phi)
+                alive = alive & ~kill
+                min_sup = jnp.min(jnp.where(alive, sup, _INF))
+                j2 = jnp.min(jnp.where(frozen & (fphi >= k), fphi, _INF)) + 1
+                k_jump = jnp.maximum(jnp.minimum(min_sup + 3, j2), k + 1)
+                k = jnp.where(any_kill, k, k_jump)
+                return (alive, phi, k, waves + 1,
+                        kills + jnp.sum(kill, dtype=jnp.int32))
+
+            init = (peelm, phi0, jnp.int32(3), jnp.int32(0), jnp.int32(0))
+            _, phi, _, waves, kills = jax.lax.while_loop(cond, body, init)
+            deltas = jnp.int32(0)
+
+        frontier = jnp.sum(peelm, dtype=jnp.int32)
+        phi = jnp.where(active, phi, 0)
+        # hand phi back in the engine's edge-sharded placement (P(ax)):
+        # every device computed the full replicated phi; emit its own block
+        idx = jax.lax.axis_index(ax)
+        phi_blk = jax.lax.dynamic_slice_in_dim(phi, idx * blk, blk)
+        return phi_blk, waves, kills, deltas, frontier
+
+    mapped = shard_map(local_fn, mesh=mesh,
+                       in_specs=(P(), P(), P(), P(), P(None, ax)),
                        out_specs=(P(ax), P(), P(), P(), P()),
                        check=False)
     return mapped(edges, active, phi0, peel_mask, bitmap)

@@ -36,12 +36,15 @@ def _kernel(a_ref, b_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "edge_block",
-                                             "word_block", "row_count"))
+                                             "word_block", "row_count",
+                                             "word_count"))
 def bitmap_support_kernel(rows_a: jax.Array, rows_b: jax.Array, *,
                           interpret: bool = False,
                           edge_block: int = EDGE_BLOCK,
                           word_block: int = WORD_BLOCK,
-                          row_offset=0, row_count: int | None = None) -> jax.Array:
+                          row_offset=0, row_count: int | None = None,
+                          word_offset=0,
+                          word_count: int | None = None) -> jax.Array:
     """sup[i] = popcount(rows_a[i] & rows_b[i]).sum() for uint32 rows [E, W].
 
     ``row_offset``/``row_count`` select one row block out of larger inputs
@@ -49,10 +52,23 @@ def bitmap_support_kernel(rows_a: jax.Array, rows_b: jax.Array, *,
     ``peel_wave_kernel``): the kernel runs unchanged over rows
     ``[row_offset, row_offset + row_count)`` and returns
     ``sup int32[row_count]``.
+
+    ``word_offset``/``word_count`` select one **word slab** — the
+    ``partition="nodes"`` addressing, where a device owns bitmap columns
+    ``[word_offset, word_offset + word_count)``: the result is that slab's
+    *partial* popcount, and summing the per-slab partials over a partition
+    of the word axis equals the full-width call exactly (integer popcounts
+    over disjoint columns — the invariant the partitioned peel engine's
+    per-wave psum rests on, pinned by ``tests/test_scale.py``).
     """
     if row_count is not None:
         rows_a = jax.lax.dynamic_slice_in_dim(rows_a, row_offset, row_count)
         rows_b = jax.lax.dynamic_slice_in_dim(rows_b, row_offset, row_count)
+    if word_count is not None:
+        rows_a = jax.lax.dynamic_slice_in_dim(rows_a, word_offset, word_count,
+                                              axis=1)
+        rows_b = jax.lax.dynamic_slice_in_dim(rows_b, word_offset, word_count,
+                                              axis=1)
     e, w = rows_a.shape
     eb = min(edge_block, max(8, e))
     wb = min(word_block, max(1, w))

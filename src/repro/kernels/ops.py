@@ -8,6 +8,7 @@ references entirely (useful for A/B benchmarking and as an escape hatch).
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from . import ref
 from .bitmap_support import bitmap_support_kernel
@@ -45,12 +46,63 @@ def _slab(row_offset, row_count, *arrays):
                  for a in arrays)
 
 
-def bitmap_support(rows_a, rows_b, row_offset=0, row_count=None):
+def _word_slab(word_offset, word_count, *arrays):
+    """Word-axis twin of ``_slab``: the ``partition="nodes"`` addressing
+    where a device owns one contiguous slab of bitmap columns.  Popcounts
+    of disjoint word slabs sum to the full-width popcount exactly, so a
+    slab call is a *partial* support — the partitioned peel engine's
+    per-wave psum operand."""
+    if word_count is None:
+        return arrays
+    return tuple(jax.lax.dynamic_slice_in_dim(a, word_offset, word_count,
+                                              axis=1)
+                 for a in arrays)
+
+
+def bitmap_support(rows_a, rows_b, row_offset=0, row_count=None,
+                   word_offset=0, word_count=None):
     if not _USE_KERNELS:
         rows_a, rows_b = _slab(row_offset, row_count, rows_a, rows_b)
+        rows_a, rows_b = _word_slab(word_offset, word_count, rows_a, rows_b)
         return ref.bitmap_support_ref(rows_a, rows_b)
     return bitmap_support_kernel(rows_a, rows_b, interpret=_interpret(),
-                                 row_offset=row_offset, row_count=row_count)
+                                 row_offset=row_offset, row_count=row_count,
+                                 word_offset=word_offset,
+                                 word_count=word_count)
+
+
+def bitmap_support_gathered(bitmap, eu, ev, chunk=None):
+    """Support counts straight from a bitmap + endpoint ids: gather the
+    rows and reduce them, in ``chunk``-row batches (``lax.map``) when
+    asked, so the resident gather transient is [chunk, W] instead of
+    [E, W] — what makes million-edge bitmaps (where ``bitmap[eu]`` alone
+    is gigabytes) feasible, and the per-slab partial-support entry of the
+    node-partitioned peel engine (``bitmap`` is then the device's word
+    slab and the result a partial sum).
+
+    Like ``peel_wave``, this sits inside the peel engine's while_loop (one
+    call per wave), so the Pallas body runs on real TPU hardware only;
+    everywhere else the fused XLA reference serves (interpret-mode
+    emulation in the hot loop costs ~40x).
+    """
+    on_tpu = _USE_KERNELS and jax.default_backend() == "tpu"
+
+    def one(a, b):
+        rows_a, rows_b = bitmap[a], bitmap[b]
+        if on_tpu:
+            return bitmap_support_kernel(rows_a, rows_b)
+        return ref.bitmap_support_ref(rows_a, rows_b)
+
+    e = eu.shape[0]
+    if chunk is None or chunk >= e:
+        return one(eu, ev)
+    nc = -(-e // chunk)
+    pad = nc * chunk - e
+    eup = jnp.pad(eu, (0, pad))
+    evp = jnp.pad(ev, (0, pad))
+    out = jax.lax.map(lambda ab: one(ab[0], ab[1]),
+                      (eup.reshape(nc, chunk), evp.reshape(nc, chunk)))
+    return out.reshape(-1)[:e]
 
 
 def peel_wave(rows_a, rows_b, alive, k, row_offset=0, row_count=None):

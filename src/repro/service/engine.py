@@ -199,6 +199,7 @@ class TrussService:
                  store: TrussStore | None = None, indexed: bool = True,
                  d_max: int | None = None, e_cap: int | None = None,
                  support_method: str = "sorted", mesh=None,
+                 partition: str = "replicated",
                  pipeline: bool = False, target_p99_ms: float | None = None,
                  max_pending: int | None = None, chaos=None,
                  breaker: CircuitBreaker | None = None,
@@ -209,15 +210,20 @@ class TrussService:
                 "store already holds state — use TrussService.restore(store)")
         # mesh: every flush's fused re-peel shards over the mesh; snapshots
         # record the (mesh-padded) capacities only, so replicas/restores on
-        # any device count stay bitwise-equal to this primary
+        # any device count stay bitwise-equal to this primary.  partition:
+        # "nodes" splits the adjacency bitmap's word axis across the mesh
+        # (each device holds O(N*W/S); exactness via per-wave psum of
+        # partial supports — see docs/ARCHITECTURE.md, memory model).
         self.graph = DynamicGraph(n_nodes, edges, d_max=d_max, e_cap=e_cap,
                                   support_method=support_method,
-                                  tracked_ks=tuple(tracked_ks), mesh=mesh)
+                                  tracked_ks=tuple(tracked_ks), mesh=mesh,
+                                  partition=partition)
         self.store = store
         self.flush_every = int(flush_every)
         self.strategy = strategy
         self.indexed = indexed
         self.support_method = support_method  # self-heal rebuilds need it
+        self.partition = partition            # ditto
         self.gen = 0                 # committed generation
         self._pending: list = []     # acked, not yet applied
         self._applied_wal = 0        # global WAL index of the committed frontier
@@ -484,7 +490,7 @@ class TrussService:
                 self.graph = DynamicGraph.from_state(
                     GraphSpec(n, d, e), state, self.support_method,
                     tuple(int(k) for k in tree["tracked"]),
-                    mesh=self.graph.mesh)
+                    mesh=self.graph.mesh, partition=self.partition)
                 self.gen = int(tree["gen"])
                 self._applied_wal = int(tree["wal_len"])
                 self._pending = []
@@ -1152,7 +1158,8 @@ class TrussService:
                             flush_every: int = 16, strategy: str = "auto",
                             indexed: bool = True,
                             support_method: str = "sorted",
-                            mesh=None, pipeline: bool = False,
+                            mesh=None, partition: str = "replicated",
+                            pipeline: bool = False,
                             target_p99_ms=None,
                             max_pending: int | None = None, chaos=None,
                             breaker: CircuitBreaker | None = None,
@@ -1165,12 +1172,14 @@ class TrussService:
         svc = cls.__new__(cls)
         svc.graph = DynamicGraph.from_state(
             GraphSpec(n, d, e), state, support_method,
-            tuple(int(k) for k in tree["tracked"]), mesh=mesh)
+            tuple(int(k) for k in tree["tracked"]), mesh=mesh,
+            partition=partition)
         svc.store = store
         svc.flush_every = int(flush_every)
         svc.strategy = strategy
         svc.indexed = indexed
         svc.support_method = support_method
+        svc.partition = partition
         svc.gen = int(tree["gen"])
         svc._pending = []
         svc._applied_wal = int(tree["wal_len"])
@@ -1185,6 +1194,7 @@ class TrussService:
     def restore(cls, store: TrussStore, *, flush_every: int = 16,
                 strategy: str = "auto", indexed: bool = True,
                 support_method: str = "sorted", mesh=None,
+                partition: str = "replicated",
                 pipeline: bool = False, target_p99_ms=None,
                 max_pending: int | None = None, chaos=None,
                 breaker: CircuitBreaker | None = None,
@@ -1204,7 +1214,8 @@ class TrussService:
                                       flush_every=flush_every,
                                       strategy=strategy, indexed=indexed,
                                       support_method=support_method,
-                                      mesh=mesh, pipeline=pipeline,
+                                      mesh=mesh, partition=partition,
+                                      pipeline=pipeline,
                                       target_p99_ms=target_p99_ms,
                                       max_pending=max_pending, chaos=chaos,
                                       breaker=breaker, retry=retry)
@@ -1349,6 +1360,17 @@ class TrussService:
             "quarantined_gens": sorted(
                 g for g, m in self._quarantined.items()
                 if m["status"] == "quarantined"),
+            # capacity-derived footprint model (what the current spec would
+            # resident per device), not a live allocator reading — matches
+            # the truss_bitmap_bytes / truss_state_bytes_per_device gauges
+            "memory": {
+                "bitmap_bytes_per_device":
+                    self.graph.spec.bitmap_bytes_per_device,
+                "state_bytes_per_device":
+                    self.graph.spec.state_bytes_per_device,
+                "partition": self.graph.spec.partition,
+                "n_shards": self.graph.spec.n_shards,
+            },
         }
         if self.slo is not None:
             self.slo.evaluate()
